@@ -1,0 +1,33 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+# Manticore prototype model constants (paper Table 2 / §7.2)
+MANTICORE_CLOCK_HZ = 475e6
+X86_SERIAL_GHZ = 4.75e9
+
+
+def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, rows: List[Dict]) -> None:
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+
+
+def row_csv(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

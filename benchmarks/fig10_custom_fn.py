@@ -1,0 +1,36 @@
+"""Fig 10: custom-function (LUT) synthesis ablation — VCPL and non-NOp
+instruction reduction with custom instructions on/off."""
+from __future__ import annotations
+
+from repro.circuits import build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import emit, row_csv
+
+NAMES = ["bc", "mc", "cgra", "mm", "rv32r", "jpeg", "noc", "blur", "vta"]
+
+
+def run():
+    rows = []
+    hw = HardwareConfig(grid_width=15, grid_height=15)
+    for nm in NAMES:
+        b = build(nm, "full")
+        on = compile_circuit(b.circuit, hw, use_luts=True)
+        off = compile_circuit(b.circuit, hw, use_luts=False)
+        rows.append({
+            "bench": nm,
+            "vcpl_on": on.vcpl, "vcpl_off": off.vcpl,
+            "vcpl_ratio": on.vcpl / off.vcpl,
+            "instrs_on": on.stats["instrs"], "instrs_off": off.stats["instrs"],
+            "instr_reduction_pct":
+                100.0 * (off.stats["instrs"] - on.stats["instrs"]) /
+                max(off.stats["instrs"], 1),
+            "lut_instrs": on.stats["lut_instrs"],
+            "lut_tables": on.stats["lut_tables"],
+        })
+        row_csv(f"fig10/{nm}", 0.0,
+                f"instr -{rows[-1]['instr_reduction_pct']:.1f}% "
+                f"vcpl x{rows[-1]['vcpl_ratio']:.2f}")
+    emit("fig10_custom_fn", rows)
+    return rows

@@ -1,0 +1,60 @@
+"""Fig 5 / Listing 1: the parallel-simulation sync-cost model.
+
+Model 1: rate(P) = 1 / (N/(P*ips) + 2*t_barrier(P)); t_barrier measured with
+threading.Barrier on this host (caveat: this container exposes one core, so
+the measured barrier cost is an upper bound — the *shape* of the curves is
+the point). Model 2 adds the i-cache pressure factor of the paper (serial
+throughput derated when the per-thread footprint exceeds L1i)."""
+from __future__ import annotations
+
+import threading
+import time
+
+from .common import emit, row_csv
+
+SIZES = [3_000, 43_000, 169_000, 1_000_000]   # instructions per RTL cycle
+THREADS = [1, 2, 4, 8, 16]
+IPS = 4.75e9 * 2.0          # instr/s per core (freq x IPC)
+ICACHE_INSTR = 64_000       # L1i footprint in instructions
+ICACHE_DERATE = 2.5
+
+
+def measure_barrier(p: int, iters: int = 200) -> float:
+    if p == 1:
+        return 0.0
+    bar = threading.Barrier(p)
+    times = []
+
+    def worker():
+        for _ in range(iters):
+            bar.wait()
+
+    ts = [threading.Thread(target=worker) for _ in range(p - 1)]
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    for _ in range(iters):
+        bar.wait()
+    for t in ts:
+        t.join()
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    barrier = {p: measure_barrier(p) for p in THREADS}
+    for n in SIZES:
+        for p in THREADS:
+            t_compute = n / p / IPS
+            r1 = 1.0 / (t_compute + 2 * barrier[p])
+            foot = n / p
+            derate = ICACHE_DERATE if foot > ICACHE_INSTR else 1.0
+            r2 = 1.0 / (t_compute * derate + 2 * barrier[p])
+            rows.append({"instr_per_cycle": n, "threads": p,
+                         "barrier_s": barrier[p],
+                         "model1_khz": r1 / 1e3, "model2_khz": r2 / 1e3})
+        best = max(r["model2_khz"] for r in rows
+                   if r["instr_per_cycle"] == n)
+        row_csv(f"fig5/{n}", 0.0, f"peak_model2={best:.0f}kHz")
+    emit("fig5_sync_model", rows)
+    return rows

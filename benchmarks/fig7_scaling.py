@@ -1,0 +1,36 @@
+"""Fig 7 analogue: compiler-predicted VCPL scaling vs core count.
+
+The paper's own methodology: "speedup numbers are predicted by Manticore's
+compiler, since the compiler can accurately count cycles"."""
+from __future__ import annotations
+
+from repro.circuits import build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import emit, row_csv
+
+GRIDS = [(1, 1), (2, 2), (4, 4), (8, 8), (15, 15), (18, 18)]
+NAMES = ["bc", "mc", "cgra", "rv32r", "jpeg", "noc"]
+
+
+def run():
+    rows = []
+    for nm in NAMES:
+        b = build(nm, "full")
+        base = None
+        for (w, h) in GRIDS:
+            hw = HardwareConfig(grid_width=w, grid_height=h,
+                                spad_words=1 << 17 if w == 1 else 16384,
+                                num_regs=1 << 14 if w == 1 else 2048,
+                                imem_slots=1 << 20 if w == 1 else 4096)
+            prog = compile_circuit(b.circuit, hw)
+            if base is None:
+                base = prog.vcpl
+            rows.append({"bench": nm, "cores": w * h, "vcpl": prog.vcpl,
+                         "used_cores": prog.used_cores,
+                         "speedup": base / prog.vcpl})
+        row_csv(f"fig7/{nm}", 0.0,
+                f"speedup@{GRIDS[-1][0]*GRIDS[-1][1]}={base / prog.vcpl:.1f}")
+    emit("fig7_scaling", rows)
+    return rows

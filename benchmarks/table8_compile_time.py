@@ -1,0 +1,33 @@
+"""Table 8 / Fig 14: compile times with per-pass breakdown."""
+from __future__ import annotations
+
+import time
+
+from repro.circuits import build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+from .common import emit, row_csv
+
+NAMES = ["vta", "mc", "noc", "mm", "rv32r", "cgra", "bc", "blur", "jpeg"]
+
+
+def run():
+    rows = []
+    hw = HardwareConfig(grid_width=15, grid_height=15)
+    for nm in NAMES:
+        b = build(nm, "full")
+        tm = {}
+        t0 = time.perf_counter()
+        prog = compile_circuit(b.circuit, hw, timings=tm)
+        total = time.perf_counter() - t0
+        rows.append({"bench": nm, "total_s": total,
+                     "nodes": len(b.circuit.nodes),
+                     "instrs": prog.stats["instrs"],
+                     "split_procs": prog.stats["split_procs"],
+                     **{f"pass_{k}": v for k, v in tm.items()}})
+        worst = max(tm, key=tm.get)
+        row_csv(f"table8/{nm}", total * 1e6,
+                f"dominant_pass={worst}({tm[worst]:.2f}s)")
+    emit("table8_compile_time", rows)
+    return rows

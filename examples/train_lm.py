@@ -1,0 +1,32 @@
+"""End-to-end driver: train a language model for a few hundred steps with
+checkpoint/restart, on whatever devices exist.
+
+Default preset is CPU-sized; `--preset 100m` trains the real xlstm-125m
+config (use on a TPU host).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+cmd = [sys.executable, "-m", "repro.launch.train",
+       "--steps", str(args.steps), "--ckpt-every", "100"]
+if args.preset == "tiny":
+    cmd += ["--arch", "qwen3-0.6b", "--smoke", "--seq", "128",
+            "--batch", "8"]
+else:
+    cmd += ["--arch", "xlstm-125m", "--seq", "1024", "--batch", "16"]
+
+env = {"PYTHONPATH": str(ROOT / "src")}
+import os
+env = {**os.environ, **env}
+raise SystemExit(subprocess.run(cmd, env=env).returncode)

@@ -1,0 +1,92 @@
+"""Shared helpers for the benchmark circuits.
+
+Every benchmark is *self-checking* (paper §7.5: "wrapped in simple,
+assertion-based Verilog test drivers"): the builder computes golden values in
+plain Python while constructing the netlist, embeds them as constants, and
+the circuit EXPECTs equality when its cycle counter reaches ``n_cycles``
+(exception id FINISH fires on success; MISMATCH on a wrong value).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List
+
+from ..core.netlist import Circuit, Sig
+
+FINISH = 1        # clean end-of-simulation
+MISMATCH = 2      # golden check failed
+M32 = (1 << 32) - 1
+M16 = (1 << 16) - 1
+
+
+@dataclass
+class Bench:
+    circuit: Circuit
+    n_cycles: int            # cycle at which FINISH fires (== cycles to run)
+    meta: Dict = field(default_factory=dict)
+
+
+def rng(seed: int) -> random.Random:
+    return random.Random(seed)
+
+
+def rotl32(c: Circuit, x: Sig, k: int) -> Sig:
+    k %= 32
+    if k == 0:
+        return x
+    return (x << k) | (x >> (32 - k))
+
+
+def rotr32(c: Circuit, x: Sig, k: int) -> Sig:
+    return rotl32(c, x, 32 - (k % 32))
+
+
+def py_rotl32(x: int, k: int) -> int:
+    k %= 32
+    return ((x << k) | (x >> (32 - k))) & M32
+
+
+def xorshift32_py(x: int) -> int:
+    x ^= (x << 13) & M32
+    x ^= x >> 17
+    x ^= (x << 5) & M32
+    return x & M32
+
+
+def xorshift32_sig(c: Circuit, x: Sig) -> Sig:
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x
+
+
+def rom16(c: Circuit, values: List[int], idx: Sig, width: int = 16) -> Sig:
+    """Small ROM as a mux tree (keeps cones parallelizable, unlike a
+    scratchpad memory which would serialize every reader into one core)."""
+    sigs = [c.const(v, width) for v in values]
+    n = max(1, (len(values) - 1).bit_length())
+    return c.onehot_mux(idx[n - 1:0] if idx.width > n else idx, sigs)
+
+
+def make_counter(c: Circuit, width: int, name: str = "ctr") -> Sig:
+    ctr = c.reg(width, init=0, name=name)
+    c.set_next(ctr, ctr + 1)
+    return ctr
+
+
+def finish_and_check(c: Circuit, ctr: Sig, n_cycles: int,
+                     checks: List) -> int:
+    """Arm golden checks at ``ctr == n_cycles`` and FINISH one cycle later,
+    so a MISMATCH always freezes the machine before the clean finish.
+
+    Returns the total cycle count at which FINISH fires (what the driver
+    should expect from a correct run)."""
+    at_check = ctr.eq(n_cycles)
+    for actual, golden in checks:
+        g = c.const(golden, actual.width)
+        # only differs from golden while the check is armed
+        val = c.mux(at_check, actual, g)
+        c.expect_eq(val, g, MISMATCH)
+    c.finish_when(ctr.eq(n_cycles + 1), FINISH)
+    return n_cycles + 2

@@ -1,0 +1,271 @@
+"""Static BSP executor — vectorized lockstep interpretation of a Program.
+
+TPU adaptation of the Manticore grid (DESIGN.md §2): core *c* of the paper's
+MIMD grid becomes lane *c* of ``[C]``-wide vectors. Every slot, all lanes
+execute their own instruction simultaneously (compute-all-select over the
+opcode — NOp lanes are masked), which is exactly the paper's lockstep
+guarantee expressed as SIMD. One Vcycle is:
+
+    lax.scan over ``t_compute`` slots  ->  BSP exchange (deferred register
+    updates from SENDs land at the Vcycle boundary)  ->  commit done.
+
+The per-slot "result" of every lane is traced; the exchange is a pure static
+gather/scatter over the trace — the paper's collision-free NoC schedule
+becomes indexed addressing (single-device) or an ``all_to_all`` under
+``shard_map`` (see ``core.grid``).
+
+The privileged core's off-chip traffic (GLD/GST) is modeled with the paper's
+direct-mapped cache + global-stall cost model: stalls do not change
+simulation *results* (the whole machine freezes together), so the engine
+executes them inline and accumulates the stall cycles performance counters
+(§7.7 / Fig. 8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compile import Program
+from .isa import Op
+
+U32 = jnp.uint32
+MASK = jnp.uint32(0xFFFF)
+
+
+class MachineState(NamedTuple):
+    regs: jax.Array      # [C, R] uint32 (values are 16-bit)
+    spads: jax.Array     # [C, S] uint32
+    gmem: jax.Array      # [G] uint32
+    flags: jax.Array     # [C] uint32 — first exception id per core (0 = none)
+    cache_tags: jax.Array  # [LINES] int32 (-1 = invalid)
+    counters: jax.Array  # [4] uint64: vcycles, ghits, gmisses, stall_cycles
+
+
+def _slot_step(luts, spad_words, gmem_words, cache_lines, line_words,
+               hit_stall, miss_stall, carry, instr):
+    """Execute one slot for all lanes. ``instr`` is [C, 7] int32."""
+    regs, spads, gmem, flags, tags, counters = carry
+    C = regs.shape[0]
+    ar = jnp.arange(C)
+
+    op = instr[:, 0]
+    dst = instr[:, 1]
+    imm = instr[:, 6].astype(U32)
+    v = [regs[ar, instr[:, k]] for k in range(2, 6)]
+    v1, v2, v3, v4 = v
+
+    # ---- arithmetic / logic (all elementwise over lanes) ----
+    add3 = v1 + v2 + v3
+    sub3 = v1 - v2 - v3
+    prod = v1 * v2
+    shamt = imm & 15
+    res_slice_off = imm >> 5
+    res_slice_msk = (U32(1) << (imm & 31)) - 1
+
+    sgn = ((v1 ^ 0x8000) - 0x8000).astype(jnp.int32)
+
+    # LUT: 16-pattern compute-all-select (per-bit-lane 4-input function)
+    tt = luts[ar, jnp.minimum(imm, luts.shape[1] - 1)]  # [C, 16] uint32
+    lut_out = jnp.zeros((C,), U32)
+    nv = [(~x) & MASK for x in v]
+    for p in range(16):
+        # pattern bit i corresponds to LUT input i (s1 -> bit 0)
+        m = (v1 if p & 1 else nv[0]) & (v2 if p & 2 else nv[1]) \
+            & (v3 if p & 4 else nv[2]) & (v4 if p & 8 else nv[3])
+        lut_out = lut_out | (m & tt[:, p])
+
+    ld_addr = v1 % spad_words
+    ld_val = spads[ar, ld_addr]
+    g_addr = ((v1 << 16) | v2) % gmem_words
+    gld_val = gmem[g_addr]
+
+    branches = [
+        (Op.MOV, v1),
+        (Op.MOVI, imm & MASK),
+        (Op.ADD, (v1 + v2) & MASK),
+        (Op.ADDC, add3 & MASK),
+        (Op.CARRY, (add3 >> 16) & MASK),
+        (Op.SUB, (v1 - v2) & MASK),
+        (Op.SUBB, sub3 & MASK),
+        (Op.BORROW, (v1 < v2 + v3).astype(U32)),
+        (Op.MUL, prod & MASK),
+        (Op.MULH, (prod >> 16) & MASK),
+        (Op.AND, v1 & v2),
+        (Op.OR, v1 | v2),
+        (Op.XOR, v1 ^ v2),
+        (Op.NOT, (~v1) & MASK),
+        (Op.MUX, jnp.where(v1 != 0, v2, v3)),
+        (Op.SEQ, (v1 == v2).astype(U32)),
+        (Op.SNE, (v1 != v2).astype(U32)),
+        (Op.SLTU, (v1 < v2).astype(U32)),
+        (Op.SLL, (v1 << shamt) & MASK),
+        (Op.SRL, v1 >> shamt),
+        (Op.SRA, (sgn >> shamt).astype(U32) & MASK),
+        (Op.SLLV, (v1 << (v2 & 15)) & MASK),
+        (Op.SRLV, v1 >> (v2 & 15)),
+        (Op.SLICE, (v1 >> res_slice_off) & res_slice_msk),
+        (Op.LUT, lut_out),
+        (Op.LD, ld_val),
+        (Op.GLD, gld_val),
+        (Op.SEND, v1),
+    ]
+    result = jnp.zeros((C,), U32)
+    for code_op, val in branches:
+        result = jnp.where(op == int(code_op), val, result)
+
+    # ---- register write (ops with a result; never r0) ----
+    no_write = ((op == int(Op.NOP)) | (op == int(Op.ST)) |
+                (op == int(Op.GST)) | (op == int(Op.EXPECT)) |
+                (op == int(Op.SEND)) | (dst == 0))
+    wdst = jnp.where(no_write, 0, dst)
+    wval = jnp.where(no_write, regs[ar, 0], result)
+    regs = regs.at[ar, wdst].set(wval)
+
+    # ---- scratchpad store (predicated) ----
+    st_mask = (op == int(Op.ST)) & (v3 != 0)
+    st_addr = v1 % spad_words
+    spads = spads.at[ar, st_addr].set(
+        jnp.where(st_mask, v2, spads[ar, st_addr]))
+
+    # ---- global store + cache/stall model (privileged lanes) ----
+    gst_mask = (op == int(Op.GST)) & (v4 != 0)
+    gmem = gmem.at[jnp.where(gst_mask, g_addr, 0)].set(
+        jnp.where(gst_mask, v3, gmem[jnp.where(gst_mask, g_addr, 0)]))
+
+    g_access = (op == int(Op.GLD)) | gst_mask
+    any_g = jnp.any(g_access)
+    # model the (single) privileged access through the direct-mapped cache
+    lane = jnp.argmax(g_access)
+    line = (g_addr[lane] // line_words).astype(jnp.int32)
+    idx = line % cache_lines
+    hit = (tags[idx] == line) & any_g
+    miss = (~hit) & any_g
+    tags = tags.at[idx].set(jnp.where(any_g, line, tags[idx]))
+    counters = counters.at[1].add(hit.astype(jnp.uint64))
+    counters = counters.at[2].add(miss.astype(jnp.uint64))
+    counters = counters.at[3].add(
+        jnp.where(hit, jnp.uint64(hit_stall),
+                  jnp.where(miss, jnp.uint64(miss_stall), jnp.uint64(0))))
+
+    # ---- exceptions (EXPECT raises when operands differ) ----
+    exc = (op == int(Op.EXPECT)) & (v1 != v2)
+    flags = jnp.where((flags == 0) & exc, imm, flags)
+
+    return (regs, spads, gmem, flags, tags, counters), result & MASK
+
+
+class Machine:
+    """Executable instance of a compiled Program (single host/device)."""
+
+    def __init__(self, program: Program, backend: str = "jnp",
+                 compact: bool = True, interpret: bool = True):
+        self.p = program
+        self.backend = backend
+        hw = program.hw
+        # active-core compaction: the FPGA burns idle cores for free, the
+        # interpreter need not simulate them (beyond-paper optimization).
+        C = program.used_cores if compact else program.code.shape[0]
+        C = max(C, 1)
+        self.C = C
+        self.code = jnp.asarray(
+            np.ascontiguousarray(program.code[:C].transpose(1, 0, 2)),
+            dtype=jnp.int32)                                    # [T, C, 7]
+        self.luts = jnp.asarray(program.luts[:C], dtype=U32)    # [C, 32, 16]
+        self.reg0 = jnp.asarray(program.reg_init[:C], dtype=U32)
+        self.spad0 = jnp.asarray(program.spad_init[:C], dtype=U32)
+        self.gmem0 = jnp.asarray(program.gmem_init, dtype=U32)
+        self.xchg = tuple(jnp.asarray(a) for a in (
+            program.xchg_src_slot, program.xchg_src_core,
+            program.xchg_dst_core, program.xchg_dst_reg))
+        self.cache_lines = hw.cache_words // hw.cache_line_words
+        self._run = jax.jit(self._run_impl, static_argnames=("num_cycles",))
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            self._vcycle_kernel = kops.make_vcycle(
+                program, C, interpret=interpret)
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> MachineState:
+        return MachineState(
+            regs=self.reg0,
+            spads=self.spad0,
+            gmem=self.gmem0,
+            flags=jnp.zeros((self.C,), U32),
+            cache_tags=-jnp.ones((self.cache_lines,), jnp.int32),
+            counters=jnp.zeros((4,), jnp.uint64),
+        )
+
+    def _vcycle(self, carry):
+        hw = self.p.hw
+        step = functools.partial(
+            _slot_step, self.luts,
+            max(self.spad0.shape[1], 1), max(self.gmem0.shape[0], 1),
+            self.cache_lines, hw.cache_line_words,
+            hw.cache_hit_stall, hw.cache_miss_stall)
+        if self.backend == "pallas":
+            carry, trace = self._vcycle_kernel(carry)
+        else:
+            carry, trace = jax.lax.scan(step, carry, self.code)
+        regs, spads, gmem, flags, tags, counters = carry
+        # ---- BSP exchange: deferred SEND register updates ----
+        s_slot, s_core, d_core, d_reg = self.xchg
+        if s_slot.shape[0]:
+            vals = trace[s_slot, s_core]
+            regs = regs.at[d_core, d_reg].set(vals)
+        counters = counters.at[0].add(jnp.uint64(1))
+        return (regs, spads, gmem, flags, tags, counters)
+
+    def _run_impl(self, state: MachineState, num_cycles: int) -> MachineState:
+        def cond(c):
+            cyc, st = c
+            return (cyc < num_cycles) & jnp.all(st[3] == 0)
+
+        def body(c):
+            cyc, st = c
+            return cyc + 1, self._vcycle(st)
+
+        _, out = jax.lax.while_loop(cond, body, (jnp.int32(0), tuple(state)))
+        return MachineState(*out)
+
+    # ------------------------------------------------------------------
+    def run(self, state: MachineState, num_cycles: int) -> MachineState:
+        """Run up to ``num_cycles`` Vcycles; freezes on the first exception
+        (the host services it — paper's global stall + host handshake)."""
+        return self._run(state, num_cycles=num_cycles)
+
+    def exceptions(self, state: MachineState) -> Dict[int, int]:
+        f = np.asarray(state.flags)
+        return {int(c): int(e) for c, e in enumerate(f) if e}
+
+    def read_output(self, state: MachineState, name: str) -> int:
+        core, mregs = self.p.outputs[name]
+        regs = np.asarray(state.regs)
+        out = 0
+        for j, r in enumerate(mregs):
+            out |= int(regs[core, r]) << (16 * j)
+        return out
+
+    def read_reg(self, state: MachineState, rtl_name: str) -> int:
+        words = self.p.state_regs[rtl_name]
+        regs = np.asarray(state.regs)
+        out = 0
+        for j, locs in enumerate(words):
+            c, r = locs[0]
+            out |= int(regs[c, r]) << (16 * j)
+        return out
+
+    def perf(self, state: MachineState) -> Dict[str, int]:
+        cnt = np.asarray(state.counters)
+        vcycles = int(cnt[0])
+        stalls = int(cnt[3])
+        return {
+            "vcycles": vcycles,
+            "ghits": int(cnt[1]),
+            "gmisses": int(cnt[2]),
+            "stall_cycles": stalls,
+            "machine_cycles": vcycles * self.p.vcpl + stalls,
+        }

@@ -1,0 +1,350 @@
+"""End-to-end compiler: Circuit -> executable Program.
+
+Pipeline (paper Fig. 4): lower -> split/merge partition -> custom-function
+synthesis -> SEND insertion + commit planning -> list scheduling + NoC
+routing -> register allocation -> binary (dense arrays consumed by the
+static-BSP executors in ``core.bsp`` / ``kernels``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .isa import HardwareConfig, Instr, NUM_FIELDS, Op, WORD_MASK
+from .lower import InitVal, Lowered, Reloc, lower
+from .lutsynth import synthesize
+from .netlist import Circuit
+from .partition import Partition, SendEdge, partition
+from .regalloc import CoreAlloc, allocate
+from .schedule import ScheduleResult, schedule
+
+
+@dataclass
+class Program:
+    """Compiled Manticore binary + static exchange schedule."""
+    name: str
+    hw: HardwareConfig
+    code: np.ndarray           # [C, T, 7] int32 (op,dst,s1..s4,imm)
+    luts: np.ndarray           # [C, 32, 16] uint16
+    reg_init: np.ndarray       # [C, R] uint16
+    spad_init: np.ndarray      # [C, S] uint16
+    gmem_init: np.ndarray      # [G] uint16
+    # static BSP exchange: value produced at (src_core, src_slot) lands in
+    # (dst_core, dst_mreg) at the Vcycle boundary.
+    xchg_src_core: np.ndarray  # [M] int32
+    xchg_src_slot: np.ndarray  # [M] int32
+    xchg_dst_core: np.ndarray  # [M] int32
+    xchg_dst_reg: np.ndarray   # [M] int32
+    t_compute: int
+    vcpl: int
+    used_cores: int
+    outputs: Dict[str, Tuple[int, List[int]]]      # name -> (core, mregs)
+    state_regs: Dict[str, List[List[Tuple[int, int]]]]  # reg -> per-word [(core, mreg), ...]
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def num_cores(self) -> int:
+        return self.code.shape[0]
+
+    @property
+    def has_global(self) -> bool:
+        return bool(self.stats.get("global_ops", 0))
+
+
+def _raw_adjacency(instrs: List[Instr]) -> Dict[int, List[int]]:
+    """RAW def->use adjacency within one process."""
+    defs: Dict[int, int] = {}
+    for i, ins in enumerate(instrs):
+        w = ins.writes()
+        if w is not None and w != 0:
+            defs[w] = i
+    adj: Dict[int, List[int]] = {}
+    for i, ins in enumerate(instrs):
+        for s in ins.srcs:
+            d = defs.get(s)
+            if d is not None:
+                adj.setdefault(d, []).append(i)
+    return adj
+
+
+def _reachable(adj: Dict[int, List[int]], start: int) -> Set[int]:
+    out: Set[int] = set()
+    stack = [start]
+    while stack:
+        i = stack.pop()
+        for u in adj.get(i, ()):
+            if u not in out:
+                out.add(u)
+                stack.append(u)
+    return out
+
+
+def compile_circuit(circuit: Circuit,
+                    hw: Optional[HardwareConfig] = None,
+                    strategy: str = "balanced",
+                    use_luts: bool = True,
+                    timings: Optional[Dict[str, float]] = None) -> Program:
+    hw = hw or HardwareConfig()
+    tm: Dict[str, float] = {} if timings is None else timings
+
+    t0 = time.perf_counter()
+    low = lower(circuit)
+    tm["lower"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    part = partition(low, hw.num_cores, strategy)
+    tm["partition"] = time.perf_counter() - t0
+    nproc = part.num_procs
+    assert nproc <= hw.num_cores, (nproc, hw.num_cores)
+
+    # protected vregs: values with consumers outside the instruction lists
+    protected: Set[int] = set()
+    for r in low.regs:
+        protected.update(r.nxt)
+    for vs in low.outputs.values():
+        protected.update(vs)
+
+    # ---- per-process instruction lists + LUT synthesis -----------------
+    t0 = time.perf_counter()
+    proc_instrs: List[List[Instr]] = []
+    proc_tables: List[List[Tuple[int, ...]]] = []
+    for p in part.procs:
+        instrs = [low.instrs[i] for i in p]
+        if use_luts:
+            instrs, tables = synthesize(instrs, low.const_vregs,
+                                        frozenset(protected),
+                                        max_tables=hw.num_luts)
+        else:
+            tables = []
+        proc_instrs.append(instrs)
+        proc_tables.append(tables)
+    tm["lutsynth"] = time.perf_counter() - t0
+
+    # ---- placement: privileged process on core 0, rest in order ---------
+    core_of_proc = list(range(nproc))
+
+    # ---- SEND insertion + commit planning --------------------------------
+    send_dst_core: Dict[int, int] = {}
+    send_meta: List[Tuple[SendEdge, Instr]] = []
+    for e in part.sends:
+        ins = Instr(Op.SEND, 0, (e.nxt_vreg,),
+                    send_dst_proc=e.dst_proc, send_dst_vreg=e.cur_vreg)
+        proc_instrs[e.src_proc].append(ins)
+        send_dst_core[id(ins)] = core_of_proc[e.dst_proc]
+        send_meta.append((e, ins))
+
+    war_edges: List[List[Tuple[int, int]]] = [[] for _ in range(nproc)]
+    order_edges: List[List[Tuple[int, int]]] = [[] for _ in range(nproc)]
+    share: List[Dict[int, int]] = [dict() for _ in range(nproc)]
+    commit_movs = 0
+    shared_commits = 0
+    # incremental dependence graph per process (RAW + accepted WAR edges):
+    # a share is legal only if adding reader->def edges keeps it acyclic,
+    # i.e. no reader of cur is reachable from def(nxt). Mutually-swapping
+    # registers (r0'=r1; r1'=r0) would otherwise deadlock the scheduler.
+    proc_adj: List[Optional[Dict[int, List[int]]]] = [None] * nproc
+    for (p, nxt, cur) in part.local_commits:
+        instrs = proc_instrs[p]
+        if proc_adj[p] is None:
+            proc_adj[p] = _raw_adjacency(instrs)
+        adj = proc_adj[p]
+        def_idx = next(i for i, ins in enumerate(instrs)
+                       if ins.writes() == nxt)
+        readers = [i for i, ins in enumerate(instrs)
+                   if cur in ins.srcs and i != def_idx]
+        desc = _reachable(adj, def_idx)
+        if not any(r in desc for r in readers):
+            # share machine register: next value lands in cur's register,
+            # WAR edges force every read of cur to issue first.
+            share[p][nxt] = cur
+            war_edges[p] += [(r, def_idx) for r in readers]
+            for r in readers:
+                adj.setdefault(r, []).append(def_idx)
+            shared_commits += 1
+        else:
+            mov = Instr(Op.MOV, cur, (nxt,))
+            instrs.append(mov)
+            mi = len(instrs) - 1
+            war_edges[p] += [(r, mi) for r in readers]
+            adj.setdefault(def_idx, []).append(mi)
+            for r in readers:
+                adj.setdefault(r, []).append(mi)
+            commit_movs += 1
+
+    # memory-order edges: every LD of a memory before its first ST; STs in
+    # program order (full-cycle semantics: reads see pre-cycle state)
+    for p, instrs in enumerate(proc_instrs):
+        by_mem: Dict[str, Tuple[List[int], List[int]]] = {}
+        for i, ins in enumerate(instrs):
+            if ins.op in (Op.LD, Op.GLD):
+                by_mem.setdefault(ins.mem or "?", ([], []))[0].append(i)
+            elif ins.op in (Op.ST, Op.GST):
+                by_mem.setdefault(ins.mem or "?", ([], []))[1].append(i)
+        for lds, sts in by_mem.values():
+            for a, b in zip(sts, sts[1:]):
+                order_edges[p].append((a, b))
+            if sts:
+                order_edges[p] += [(ld, sts[0]) for ld in lds]
+
+    # ---- schedule ---------------------------------------------------------
+    t0 = time.perf_counter()
+    sched = schedule(proc_instrs, core_of_proc, hw, send_dst_core,
+                     war_edges, order_edges)
+    tm["schedule"] = time.perf_counter() - t0
+
+    # ---- memory placement (resolve relocations) --------------------------
+    spad_base: Dict[str, int] = {}
+    gmem_base: Dict[str, int] = {}
+    core_spad_used = [0] * hw.num_cores
+    g_used = 0
+    owner_core: Dict[str, int] = {}
+    for p, mems in enumerate(part.proc_mems):
+        for mname in mems:
+            m = low.mems[mname]
+            c = core_of_proc[p]
+            owner_core[mname] = c
+            spad_base[mname] = core_spad_used[c]
+            core_spad_used[c] += m.depth * m.stride
+            if core_spad_used[c] > hw.spad_words:
+                raise RuntimeError(
+                    f"scratchpad overflow on core {c}: {core_spad_used[c]} "
+                    f"words (memory {mname})")
+    for mname, m in low.mems.items():
+        if m.is_global:
+            gmem_base[mname] = g_used
+            g_used += m.depth * m.stride
+
+    def resolve(v: InitVal) -> int:
+        if isinstance(v, int):
+            return v & WORD_MASK
+        m = low.mems[v.mem]
+        base = gmem_base[v.mem] if m.is_global else spad_base[v.mem]
+        addr = base + v.offset
+        return (addr >> 16) & WORD_MASK if v.part == "hi" else addr & WORD_MASK
+
+    # ---- register allocation ---------------------------------------------
+    t0 = time.perf_counter()
+    pinned: Dict[int, InitVal] = dict(low.vreg_init)
+    for r in low.regs:
+        for j, cw in enumerate(r.cur):
+            pinned[cw] = (r.init >> (16 * j)) & WORD_MASK
+
+    allocs: List[Optional[CoreAlloc]] = [None] * hw.num_cores
+    for p in range(nproc):
+        c = core_of_proc[p]
+        allocs[c] = allocate(sched.cores[c].slots, pinned, share[p],
+                             hw.num_regs)
+    tm["regalloc"] = time.perf_counter() - t0
+
+    # ---- emit binary -------------------------------------------------------
+    C, T = hw.num_cores, max(sched.t_compute, 1)
+    code = np.zeros((C, T, NUM_FIELDS), dtype=np.int32)
+    luts = np.zeros((C, hw.num_luts, 16), dtype=np.uint16)
+    reg_init = np.zeros((C, hw.num_regs), dtype=np.uint16)
+    spad_init = np.zeros((C, max(max(core_spad_used), 1)), dtype=np.uint16)
+    gmem_init = np.zeros((max(g_used, 1),), dtype=np.uint16)
+
+    send_slot_reg: Dict[int, Tuple[int, int]] = {}  # id(ins) -> (core, slot)
+    global_ops = 0
+    for c in range(C):
+        al = allocs[c]
+        if al is None:
+            continue
+        vm = al.vreg_to_mreg
+        for mreg, iv in al.init:
+            reg_init[c, mreg] = resolve(iv)
+        for t, ins in enumerate(sched.cores[c].slots):
+            if ins is None:
+                continue
+            op = ins.op
+            if op in (Op.GLD, Op.GST):
+                global_ops += 1
+            dst = vm.get(ins.dst, 0) if ins.writes() is not None else 0
+            if op == Op.MOV and ins.dst in vm:   # commit MOV writes cur
+                dst = vm[ins.dst]
+            ss = [vm.get(s, 0) for s in ins.srcs] + [0] * (4 - len(ins.srcs))
+            imm = ins.imm
+            if op == Op.SEND:
+                send_slot_reg[id(ins)] = (c, t)
+            code[c, t] = (int(op), dst, ss[0], ss[1], ss[2], ss[3], imm)
+    for p, tables in enumerate(proc_tables):
+        c = core_of_proc[p]
+        for k, tt in enumerate(tables):
+            luts[c, k] = np.array(tt, dtype=np.uint16)
+
+    # exchange tables
+    xs_core, xs_slot, xd_core, xd_reg = [], [], [], []
+    for e, ins in send_meta:
+        c, t = send_slot_reg[id(ins)]
+        dc = core_of_proc[e.dst_proc]
+        dal = allocs[dc]
+        assert dal is not None
+        dreg = dal.vreg_to_mreg.get(e.cur_vreg)
+        assert dreg is not None, (
+            f"SEND target register v{e.cur_vreg} unallocated in core {dc}")
+        xs_core.append(c); xs_slot.append(t)
+        xd_core.append(dc); xd_reg.append(dreg)
+        imm = (dc << 16) | dreg
+        code[c, t, 6] = imm
+
+    # memory images
+    for mname, m in low.mems.items():
+        w = np.array(m.init_words, dtype=np.uint16)
+        if m.is_global:
+            b = gmem_base[mname]
+            gmem_init[b:b + len(w)] = w
+        else:
+            c, b = owner_core[mname], spad_base[mname]
+            spad_init[c, b:b + len(w)] = w
+
+    # host-visible values
+    outputs: Dict[str, Tuple[int, List[int]]] = {}
+    priv_core = core_of_proc[part.priv_proc]
+    pal = allocs[priv_core]
+    for name, vregs in low.outputs.items():
+        if pal is not None and all(v in pal.vreg_to_mreg for v in vregs):
+            outputs[name] = (priv_core, [pal.vreg_to_mreg[v] for v in vregs])
+
+    # every core holding a copy of a register word (owner + duplicated
+    # readers) — read_reg uses the first, elastic migration writes them all
+    state_regs: Dict[str, List[List[Tuple[int, int]]]] = {}
+    for r in low.regs:
+        words: List[List[Tuple[int, int]]] = []
+        for cw in r.cur:
+            locs = [(c, allocs[c].vreg_to_mreg[cw]) for c in range(C)
+                    if allocs[c] is not None and cw in allocs[c].vreg_to_mreg]
+            words.append(locs)
+        if all(words):
+            state_regs[r.name] = words
+
+    stats = dict(sched.stats)
+    stats.update(part.stats())
+    stats["mem_layout"] = {
+        mname: ((0, gmem_base[mname], m.depth * m.stride, True)
+                if m.is_global else
+                (owner_core[mname], spad_base[mname], m.depth * m.stride,
+                 False))
+        for mname, m in low.mems.items()}
+    stats.update({
+        "commit_movs": commit_movs,
+        "shared_commits": shared_commits,
+        "global_ops": global_ops,
+        "lut_tables": sum(len(t) for t in proc_tables),
+        "lut_instrs": int((code[..., 0] == int(Op.LUT)).sum()),
+        "used_cores": nproc,
+        "spad_words_max": max(core_spad_used),
+        "compile_times": dict(tm),
+    })
+
+    return Program(
+        name=circuit.name, hw=hw, code=code, luts=luts, reg_init=reg_init,
+        spad_init=spad_init, gmem_init=gmem_init,
+        xchg_src_core=np.array(xs_core, dtype=np.int32),
+        xchg_src_slot=np.array(xs_slot, dtype=np.int32),
+        xchg_dst_core=np.array(xd_core, dtype=np.int32),
+        xchg_dst_reg=np.array(xd_reg, dtype=np.int32),
+        t_compute=sched.t_compute, vcpl=sched.vcpl, used_cores=nproc,
+        outputs=outputs, state_regs=state_regs, stats=stats)

@@ -1,0 +1,219 @@
+"""Multi-device static BSP execution: cores sharded over a device mesh.
+
+This is the paper's NoC scaled past one chip: a Manticore grid too large for
+one accelerator is sharded over a TPU mesh, and the Vcycle-boundary exchange
+becomes **one statically-shaped ``all_to_all``** per Vcycle under
+``shard_map`` — the BSP superstep's communication phase. Because the compiler
+knows every SEND (source core/slot, destination core/register) at compile
+time, the per-device-pair message matrix is a *static* numpy table: message
+``k`` from device ``s`` to device ``d`` always carries the same (slot, core)
+trace entry into the same (core, register) cell. No runtime routing, no
+dynamic shapes — the schedule is collision-free by construction, exactly as
+on the paper's deflection-free torus.
+
+Per-device state (register files, scratchpads, flags) lives sharded on the
+``cores`` axis; the privileged core's global memory rides along sharded per
+device (only its owner mutates it).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .bsp import MachineState, _slot_step
+from .compile import Program
+
+
+class ExchangeTables(NamedTuple):
+    """Static per-device message tables ([D, D, M] sharded on axis 0)."""
+    snd_slot: jax.Array   # trace slot to read (source side)
+    snd_core: jax.Array   # local core to read
+    snd_valid: jax.Array  # bool
+    rcv_core: jax.Array   # local core to write (receive side)
+    rcv_reg: jax.Array    # machine register to write
+    rcv_valid: jax.Array  # bool
+
+
+def _build_exchange(program: Program, D: int, cl: int) -> Tuple[np.ndarray, ...]:
+    """Group the compile-time SEND table by (src_dev, dst_dev)."""
+    msgs: Dict[Tuple[int, int], list] = {}
+    n = program.xchg_src_core.shape[0]
+    for i in range(n):
+        sc = int(program.xchg_src_core[i]); dc = int(program.xchg_dst_core[i])
+        sd, dd = sc // cl, dc // cl
+        msgs.setdefault((sd, dd), []).append(
+            (int(program.xchg_src_slot[i]), sc % cl, dc % cl,
+             int(program.xchg_dst_reg[i])))
+    mmax = max((len(v) for v in msgs.values()), default=0)
+    mmax = max(mmax, 1)
+    shape = (D, D, mmax)
+    snd_slot = np.zeros(shape, np.int32)
+    snd_core = np.zeros(shape, np.int32)
+    snd_valid = np.zeros(shape, bool)
+    rcv_core = np.zeros(shape, np.int32)
+    rcv_reg = np.zeros(shape, np.int32)
+    rcv_valid = np.zeros(shape, bool)
+    for (sd, dd), lst in msgs.items():
+        for k, (slot, score, dcore, dreg) in enumerate(lst):
+            snd_slot[sd, dd, k] = slot
+            snd_core[sd, dd, k] = score
+            snd_valid[sd, dd, k] = True
+            # receive tables are indexed by the *receiver*: row = src device
+            rcv_core[dd, sd, k] = dcore
+            rcv_reg[dd, sd, k] = dreg
+            rcv_valid[dd, sd, k] = True
+    return snd_slot, snd_core, snd_valid, rcv_core, rcv_reg, rcv_valid
+
+
+class GridMachine:
+    """Static BSP executor over a device mesh (axis name: 'cores')."""
+
+    AXIS = "cores"
+
+    def __init__(self, program: Program, mesh: Mesh):
+        self.p = program
+        self.mesh = mesh
+        D = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        assert mesh.axis_names == (self.AXIS,), \
+            "GridMachine expects a 1-D mesh over axis 'cores'"
+        self.D = D
+        hw = program.hw
+        C = program.used_cores
+        cl = max(1, -(-C // D))            # cores per device
+        Cp = cl * D
+        self.C, self.cl, self.Cp = C, cl, Cp
+
+        code = np.zeros((program.code.shape[1], Cp, 7), np.int32)
+        code[:, :C] = program.code[:C].transpose(1, 0, 2)
+        luts = np.zeros((Cp,) + program.luts.shape[1:], np.uint32)
+        luts[:C] = program.luts[:C]
+        regs = np.zeros((Cp, program.reg_init.shape[1]), np.uint32)
+        regs[:C] = program.reg_init[:C]
+        spads = np.zeros((Cp, program.spad_init.shape[1]), np.uint32)
+        spads[:C] = program.spad_init[:C]
+
+        sh = lambda *spec: NamedSharding(mesh, P(*spec))
+        # code is [T, Cp, 7]: shard the core axis
+        self.code = jax.device_put(code, sh(None, self.AXIS, None))
+        self.luts = jax.device_put(luts, sh(self.AXIS))
+        self.reg0 = jax.device_put(regs, sh(self.AXIS))
+        self.spad0 = jax.device_put(spads, sh(self.AXIS))
+        gmem = np.broadcast_to(program.gmem_init.astype(np.uint32),
+                               (D,) + program.gmem_init.shape).copy()
+        self.gmem0 = jax.device_put(gmem, sh(self.AXIS))
+
+        self.xt = ExchangeTables(*[
+            jax.device_put(a, sh(self.AXIS))
+            for a in _build_exchange(program, D, cl)])
+        self.cache_lines = hw.cache_words // hw.cache_line_words
+
+        def device_vcycle(code, luts, regs, spads, gmem, flags, tags,
+                          counters, xt: ExchangeTables):
+            # local shapes: code [T, cl, 7]; gmem [1, G]; tables [1, D, M]
+            gmem = gmem[0]
+            local_step = functools.partial(
+                _slot_step, luts, max(spads.shape[1], 1),
+                max(gmem.shape[0], 1), self.cache_lines,
+                hw.cache_line_words, hw.cache_hit_stall, hw.cache_miss_stall)
+            carry = (regs, spads, gmem, flags, tags[0], counters[0])
+            carry, trace = jax.lax.scan(local_step, carry, code)
+            regs, spads, gmem, flags, tags, counters = carry
+            # ---- BSP exchange: one all_to_all per Vcycle ----
+            snd_slot, snd_core, snd_valid = (xt.snd_slot[0], xt.snd_core[0],
+                                             xt.snd_valid[0])
+            rcv_core, rcv_reg, rcv_valid = (xt.rcv_core[0], xt.rcv_reg[0],
+                                            xt.rcv_valid[0])
+            out = trace[snd_slot, snd_core]            # [D, M]
+            inb = jax.lax.all_to_all(out, self.AXIS, 0, 0, tiled=True)
+            # masked scatter: invalid entries land in a sacrificial register
+            # column appended to the register file
+            pad = jnp.zeros((regs.shape[0], 1), regs.dtype)
+            regs_x = jnp.concatenate([regs, pad], axis=1)
+            dst_core = jnp.where(rcv_valid, rcv_core, 0).reshape(-1)
+            dst_reg = jnp.where(rcv_valid, rcv_reg,
+                                regs.shape[1]).reshape(-1)
+            regs_x = regs_x.at[dst_core, dst_reg].set(inb.reshape(-1))
+            regs = regs_x[:, :-1]
+            counters = counters.at[0].add(jnp.uint64(1))
+            return regs, spads, gmem[None], flags, tags[None], counters[None]
+
+        spec_c = P(self.AXIS)
+        self._vcycle = jax.shard_map(
+            device_vcycle, mesh=mesh,
+            in_specs=(P(None, self.AXIS, None), spec_c, spec_c, spec_c,
+                      spec_c, spec_c, spec_c, spec_c,
+                      ExchangeTables(*([spec_c] * 6))),
+            out_specs=(spec_c, spec_c, spec_c, spec_c, spec_c, spec_c),
+            check_vma=False)
+
+        @functools.partial(jax.jit, static_argnames=("num_cycles",))
+        def run(state, num_cycles):
+            def cond(c):
+                cyc, st = c
+                return (cyc < num_cycles) & jnp.all(st[3] == 0)
+
+            def body(c):
+                cyc, st = c
+                regs, spads, gmem, flags, tags, counters = self._vcycle(
+                    self.code, self.luts, st[0], st[1], st[2], st[3], st[4],
+                    st[5], self.xt)
+                return cyc + 1, (regs, spads, gmem, flags, tags, counters)
+
+            _, out = jax.lax.while_loop(cond, body,
+                                        (jnp.int32(0), tuple(state)))
+            return MachineState(*out)
+
+        self._run = run
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> MachineState:
+        sh = lambda *spec: NamedSharding(self.mesh, P(*spec))
+        D = self.D
+        return MachineState(
+            regs=self.reg0, spads=self.spad0, gmem=self.gmem0,
+            flags=jax.device_put(np.zeros((self.Cp,), np.uint32),
+                                 sh(self.AXIS)),
+            cache_tags=jax.device_put(
+                -np.ones((D, self.cache_lines), np.int32), sh(self.AXIS)),
+            counters=jax.device_put(np.zeros((D, 4), np.uint64),
+                                    sh(self.AXIS)),
+        )
+
+    def run(self, state: MachineState, num_cycles: int) -> MachineState:
+        return self._run(state, num_cycles=num_cycles)
+
+    def exceptions(self, state: MachineState) -> Dict[int, int]:
+        f = np.asarray(state.flags)[:self.C]
+        return {int(c): int(e) for c, e in enumerate(f) if e}
+
+    def read_reg(self, state: MachineState, rtl_name: str) -> int:
+        words = self.p.state_regs[rtl_name]
+        regs = np.asarray(state.regs)
+        out = 0
+        for j, locs in enumerate(words):
+            c, r = locs[0]
+            out |= int(regs[c, r]) << (16 * j)
+        return out
+
+    def read_output(self, state: MachineState, name: str) -> int:
+        core, mregs = self.p.outputs[name]
+        regs = np.asarray(state.regs)
+        out = 0
+        for j, r in enumerate(mregs):
+            out |= int(regs[core, r]) << (16 * j)
+        return out
+
+    def perf(self, state: MachineState) -> Dict[str, int]:
+        cnt = np.asarray(state.counters)[0]
+        return {
+            "vcycles": int(cnt[0]),
+            "ghits": int(cnt[1]),
+            "gmisses": int(cnt[2]),
+            "stall_cycles": int(cnt[3]),
+            "machine_cycles": int(cnt[0]) * self.p.vcpl + int(cnt[3]),
+        }

@@ -1,0 +1,150 @@
+"""Numpy ISA simulator for compiled Programs.
+
+The paper (§6) keeps interpreters for both IRs to validate compiler passes;
+this is ours for the *lower* level: a direct, jit-free executor of the
+binary + exchange schedule. Used heavily by the hypothesis property tests
+(fast per-example, no XLA compile) and as a second, independent oracle
+against the jnp/Pallas engines.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .compile import Program
+from .isa import Op
+
+M = 0xFFFF
+
+
+class IsaSim:
+    def __init__(self, prog: Program):
+        self.p = prog
+        C = prog.used_cores
+        self.C = C
+        self.code = prog.code[:C]          # [C, T, 7]
+        self.luts = prog.luts[:C].astype(np.uint32)
+        self.regs = prog.reg_init[:C].astype(np.uint32).copy()
+        self.spads = prog.spad_init[:C].astype(np.uint32).copy()
+        self.gmem = prog.gmem_init.astype(np.uint32).copy()
+        self.flags = np.zeros((C,), np.uint32)
+        self.cycle = 0
+
+    def _exec_one(self, c: int, w) -> int:
+        op, dst, s1, s2, s3, s4, imm = (int(x) for x in w)
+        r = self.regs[c]
+        v1, v2, v3, v4 = int(r[s1]), int(r[s2]), int(r[s3]), int(r[s4])
+        res = 0
+        o = Op(op)
+        if o == Op.NOP:
+            return 0
+        elif o == Op.MOV:
+            res = v1
+        elif o == Op.MOVI:
+            res = imm & M
+        elif o == Op.ADD:
+            res = (v1 + v2) & M
+        elif o == Op.ADDC:
+            res = (v1 + v2 + v3) & M
+        elif o == Op.CARRY:
+            res = (v1 + v2 + v3) >> 16
+        elif o == Op.SUB:
+            res = (v1 - v2) & M
+        elif o == Op.SUBB:
+            res = (v1 - v2 - v3) & M
+        elif o == Op.BORROW:
+            res = 1 if v1 - v2 - v3 < 0 else 0
+        elif o == Op.MUL:
+            res = (v1 * v2) & M
+        elif o == Op.MULH:
+            res = (v1 * v2) >> 16
+        elif o == Op.AND:
+            res = v1 & v2
+        elif o == Op.OR:
+            res = v1 | v2
+        elif o == Op.XOR:
+            res = v1 ^ v2
+        elif o == Op.NOT:
+            res = (~v1) & M
+        elif o == Op.MUX:
+            res = v2 if v1 else v3
+        elif o == Op.SEQ:
+            res = int(v1 == v2)
+        elif o == Op.SNE:
+            res = int(v1 != v2)
+        elif o == Op.SLTU:
+            res = int(v1 < v2)
+        elif o == Op.SLL:
+            res = (v1 << (imm & 15)) & M
+        elif o == Op.SRL:
+            res = v1 >> (imm & 15)
+        elif o == Op.SRA:
+            sv = v1 - 0x10000 if v1 & 0x8000 else v1
+            res = (sv >> (imm & 15)) & M
+        elif o == Op.SLLV:
+            res = (v1 << (v2 & 15)) & M
+        elif o == Op.SRLV:
+            res = v1 >> (v2 & 15)
+        elif o == Op.SLICE:
+            res = (v1 >> (imm >> 5)) & ((1 << (imm & 31)) - 1)
+        elif o == Op.LUT:
+            tt = self.luts[c, min(imm, self.luts.shape[1] - 1)]
+            res = 0
+            for j in range(16):
+                pat = ((v1 >> j) & 1) | (((v2 >> j) & 1) << 1) | \
+                    (((v3 >> j) & 1) << 2) | (((v4 >> j) & 1) << 3)
+                res |= ((int(tt[pat]) >> j) & 1) << j
+        elif o == Op.LD:
+            res = int(self.spads[c, v1 % self.spads.shape[1]])
+        elif o == Op.ST:
+            if v3:
+                self.spads[c, v1 % self.spads.shape[1]] = v2
+            return 0
+        elif o == Op.GLD:
+            res = int(self.gmem[((v1 << 16) | v2) % len(self.gmem)])
+        elif o == Op.GST:
+            if v4:
+                self.gmem[((v1 << 16) | v2) % len(self.gmem)] = v3
+            return 0
+        elif o == Op.SEND:
+            return v1            # traced value; no register write
+        elif o == Op.EXPECT:
+            if v1 != v2 and self.flags[c] == 0:
+                self.flags[c] = imm
+            return 0
+        if dst != 0:
+            self.regs[c, dst] = res
+        return res
+
+    def step(self) -> None:
+        """One Vcycle: slot loop + BSP exchange."""
+        T = self.code.shape[1]
+        trace = np.zeros((T, self.C), np.uint32)
+        for t in range(T):
+            for c in range(self.C):
+                if self.code[c, t, 0]:
+                    trace[t, c] = self._exec_one(c, self.code[c, t])
+        p = self.p
+        for i in range(p.xchg_src_core.shape[0]):
+            sc, ss = int(p.xchg_src_core[i]), int(p.xchg_src_slot[i])
+            dc, dr = int(p.xchg_dst_core[i]), int(p.xchg_dst_reg[i])
+            self.regs[dc, dr] = trace[ss, sc]
+        self.cycle += 1
+
+    def run(self, max_cycles: int) -> int:
+        for _ in range(max_cycles):
+            if self.flags.any():
+                break
+            self.step()
+        return self.cycle
+
+    def read_reg(self, name: str) -> int:
+        out = 0
+        for j, locs in enumerate(self.p.state_regs[name]):
+            c, r = locs[0]
+            out |= int(self.regs[c, r]) << (16 * j)
+        return out
+
+    def exceptions(self) -> Dict[int, int]:
+        return {c: int(e) for c, e in enumerate(self.flags) if e}

@@ -1,0 +1,215 @@
+"""List scheduling + static NoC routing (paper §6.3).
+
+Performs an abstract cycle-accurate simulation of one Vcycle over a model of
+the core pipeline and the uni-directional 2D torus NoC:
+
+  * an instruction issues when its RAW predecessors issued >= ``raw_latency``
+    slots earlier (the compiler resolves hazards with NOps — there are no
+    interlocks in hardware);
+  * memory-order edges keep full-cycle semantics (all loads of a memory issue
+    before its stores; stores keep program order);
+  * WAR edges protect current-register values until their commit (either an
+    explicit MOV or the Wimmer-Franz register-sharing optimization that lands
+    the next value directly in the current register);
+  * a SEND issues only when every link of its dimension-ordered route is free
+    at the corresponding future slot and its arrival slot at the destination
+    is unique (the paper's switches drop colliding messages — the schedule
+    must be collision-free *by construction*);
+  * received messages cost one epilogue slot each at the destination
+    (they are replayed from instruction memory, §5.2).
+
+The scheduler reports **VCPL** — machine slots per simulated RTL cycle — the
+paper's exact performance model for a deterministic machine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .isa import HardwareConfig, Instr, Op
+
+RAW = 0
+ORDER = 1  # issue-order edge (memory order, WAR): latency 1
+
+
+@dataclass
+class CoreProgram:
+    """One core's scheduled stream: slot -> instr (None = NOp)."""
+    slots: List[Optional[Instr]]
+    recv_count: int = 0
+    # (slot, dst_core, dst_machine_reg placeholder vreg) for SENDs, filled in
+    sends: List[Tuple[int, Instr]] = field(default_factory=list)
+
+
+@dataclass
+class ScheduleResult:
+    cores: List[CoreProgram]
+    t_compute: int            # executed slots per Vcycle
+    vcpl: int                 # full virtual critical path (incl. epilogue)
+    stats: Dict[str, float] = field(default_factory=dict)
+
+
+def _route(hw: HardwareConfig, src: int, dst: int) -> List[Tuple[str, int, int]]:
+    """Dimension-ordered route on the uni-directional torus: +x then +y.
+    Returns a list of directed links ('x'|'y', x, y) traversed in order."""
+    sx, sy = hw.core_xy(src)
+    dx, dy = hw.core_xy(dst)
+    links: List[Tuple[str, int, int]] = []
+    x, y = sx, sy
+    while x != dx:
+        links.append(("x", x, y))
+        x = (x + 1) % hw.grid_width
+    while y != dy:
+        links.append(("y", x, y))
+        y = (y + 1) % hw.grid_height
+    if not links:  # self-send (possible after merging); one local hop
+        links.append(("x", x, y))
+    return links
+
+
+def schedule(core_instrs: List[List[Instr]],
+             core_of_proc: List[int],
+             hw: HardwareConfig,
+             send_dst_core: Dict[int, int],
+             war_edges: List[List[Tuple[int, int]]],
+             order_edges: List[List[Tuple[int, int]]]) -> ScheduleResult:
+    """Schedule every process's instruction list onto its core.
+
+    ``core_instrs[p]`` is process p's topo-ordered instruction list (SENDs
+    included). ``war_edges[p]`` / ``order_edges[p]`` are (src_idx, dst_idx)
+    issue-order constraints. ``send_dst_core`` maps id(instr) -> dst core.
+    """
+    ncores = hw.num_cores
+    L = hw.raw_latency
+
+    # per-process dependence structures
+    preds: List[List[List[Tuple[int, int]]]] = []   # p -> i -> [(j, kind)]
+    succs: List[List[List[Tuple[int, int]]]] = []
+    for p, instrs in enumerate(core_instrs):
+        defs: Dict[int, int] = {}
+        pr: List[List[Tuple[int, int]]] = [[] for _ in instrs]
+        su: List[List[Tuple[int, int]]] = [[] for _ in instrs]
+        for i, ins in enumerate(instrs):
+            for s in ins.srcs:
+                d = defs.get(s)
+                if d is not None:
+                    pr[i].append((d, RAW))
+                    su[d].append((i, RAW))
+            w = ins.writes()
+            if w is not None and w != 0:   # vreg 0 is the constant zero
+                defs[w] = i
+        for (a, b) in war_edges[p] + order_edges[p]:
+            pr[b].append((a, ORDER))
+            su[a].append((b, ORDER))
+        preds.append(pr)
+        succs.append(su)
+
+    # priority = longest latency path to any leaf (critical path first)
+    prio: List[List[int]] = []
+    for p, instrs in enumerate(core_instrs):
+        n = len(instrs)
+        pv = [0] * n
+        for i in range(n - 1, -1, -1):
+            best = 0
+            for (j, kind) in succs[p][i]:
+                lat = L if kind == RAW else 1
+                best = max(best, pv[j] + lat)
+            pv[i] = best
+        prio.append(pv)
+
+    # scheduling state
+    n_sched: List[int] = [0] * len(core_instrs)
+    sched_slot: List[List[int]] = [[-1] * len(ci) for ci in core_instrs]
+    npreds_left = [[len(pp) for pp in preds[p]] for p in range(len(preds))]
+    ready: List[List[int]] = [[] for _ in core_instrs]   # instr idxs
+    ready_time: List[Dict[int, int]] = [dict() for _ in core_instrs]
+    for p, instrs in enumerate(core_instrs):
+        for i in range(len(instrs)):
+            if npreds_left[p][i] == 0:
+                ready[p].append(i)
+                ready_time[p][i] = 0
+
+    link_busy: Dict[Tuple[str, int, int], Set[int]] = {}
+    arrival_busy: Dict[int, Set[int]] = {}
+    recv_count = [0] * ncores
+    core_slots: List[List[Optional[Instr]]] = [[] for _ in range(ncores)]
+    core_sends: List[List[Tuple[int, Instr]]] = [[] for _ in range(ncores)]
+    last_arrival = 0
+
+    total = sum(len(ci) for ci in core_instrs)
+    done = 0
+    t = 0
+    max_slots = 4 * total + 64 + sum(len(ci) == 0 for ci in core_instrs)
+    proc_list = list(range(len(core_instrs)))
+    while done < total:
+        if t > max_slots:
+            raise RuntimeError("scheduler failed to converge")
+        for p in proc_list:
+            c = core_of_proc[p]
+            instrs = core_instrs[p]
+            # pick highest-priority ready instr that can issue now
+            cand = sorted((i for i in ready[p] if ready_time[p][i] <= t),
+                          key=lambda i: (-prio[p][i], i))
+            issued = None
+            for i in cand:
+                ins = instrs[i]
+                if ins.op == Op.SEND:
+                    dst = send_dst_core[id(ins)]
+                    links = _route(hw, c, dst)
+                    slots_needed = [t + 1 + k * hw.send_latency
+                                    for k in range(len(links))]
+                    arrive = t + 1 + len(links) * hw.send_latency
+                    if any(s in link_busy.get(lk, set())
+                           for lk, s in zip(links, slots_needed)):
+                        continue
+                    if arrive in arrival_busy.get(dst, set()):
+                        continue
+                    for lk, s in zip(links, slots_needed):
+                        link_busy.setdefault(lk, set()).add(s)
+                    arrival_busy.setdefault(dst, set()).add(arrive)
+                    recv_count[dst] += 1
+                    last_arrival = max(last_arrival, arrive)
+                    core_sends[c].append((t, ins))
+                issued = i
+                break
+            # pad with NOps up to slot t
+            while len(core_slots[c]) < t:
+                core_slots[c].append(None)
+            if issued is not None:
+                ins = instrs[issued]
+                core_slots[c].append(ins)
+                sched_slot[p][issued] = t
+                ready[p].remove(issued)
+                done += 1
+                for (j, kind) in succs[p][issued]:
+                    npreds_left[p][j] -= 1
+                    lat = L if kind == RAW else 1
+                    rt = max(ready_time[p].get(j, 0), t + lat)
+                    ready_time[p][j] = rt
+                    if npreds_left[p][j] == 0:
+                        ready[p].append(j)
+        t += 1
+
+    t_compute = max((len(s) for s in core_slots), default=0)
+    t_compute = max(t_compute, last_arrival)
+    for s in core_slots:
+        while len(s) < t_compute:
+            s.append(None)
+
+    epilogue = max(recv_count) if recv_count else 0
+    vcpl = t_compute + epilogue
+
+    nops = sum(1 for s in core_slots for x in s if x is None)
+    sends_n = sum(len(s) for s in core_sends)
+    cores = [CoreProgram(core_slots[c], recv_count[c], core_sends[c])
+             for c in range(ncores)]
+    res = ScheduleResult(cores, t_compute, vcpl, stats={
+        "t_compute": t_compute,
+        "epilogue": epilogue,
+        "vcpl": vcpl,
+        "nops": nops,
+        "sends": sends_n,
+        "instrs": total,
+        "imem_overflow": max(0, vcpl - hw.imem_slots),
+    })
+    return res

@@ -1,0 +1,61 @@
+"""Mesh context + activation-sharding helper.
+
+The model code is mesh-agnostic: ``shard_act`` becomes a no-op outside a mesh
+context (CPU smoke tests) and a GSPMD sharding constraint inside one (dry-run
+/ production). Axis names: ("pod",) "data", "model" — see launch/mesh.py.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(*names):
+    """Drop mesh axes that do not exist (single-pod vs multi-pod meshes)."""
+    mesh = current_mesh()
+    out = []
+    for n in names:
+        if n is None or isinstance(n, (list, tuple)):
+            out.append(n)
+        elif mesh is not None and n not in mesh.axis_names:
+            out.append(None)
+        else:
+            out.append(n)
+    return tuple(out)
+
+
+def batch_axes():
+    """The data-parallel axes present in the current mesh."""
+    mesh = current_mesh()
+    if mesh is not None and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return "data"
+
+
+def shard_act(x: jax.Array, *spec) -> jax.Array:
+    """Constrain activation sharding (no-op without a mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*_resolve(*spec))))

@@ -1,0 +1,82 @@
+"""Static-BSP trainer: manual, bucketed gradient collectives under shard_map.
+
+pjit/GSPMD places gradient all-reduces automatically; at 1000+ nodes you
+want them *explicitly scheduled* — the paper's static-BSP discipline. This
+trainer computes grads per data shard with no auto-partitioning, then emits
+one `psum` per fixed-size bucket in a compiler-known order (large buckets
+first, so the scheduler can overlap the tail of backward with the head of
+the reduction — XLA overlaps independent collectives with compute when the
+dependence graph allows, which the bucket ordering guarantees).
+
+Data-parallel only (params replicated per shard); compose with in-layer TP
+by nesting meshes. Used by tests/test_overlap.py and available to
+launch/train.py via --manual-dp.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_buckets(params: Any, bucket_bytes: int = 32 << 20) -> List[List[int]]:
+    """Greedy fixed-size bucketing of flattened gradient leaves,
+    largest-first (reduction order = reverse autodiff completion order)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    order = sorted(range(len(leaves)),
+                   key=lambda i: -leaves[i].size * leaves[i].dtype.itemsize)
+    buckets: List[List[int]] = []
+    cur: List[int] = []
+    cur_b = 0
+    for i in order:
+        b = leaves[i].size * leaves[i].dtype.itemsize
+        if cur and cur_b + b > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_b = [], 0
+        cur.append(i)
+        cur_b += b
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def bucketed_psum(grads: Any, axis: str, buckets: List[List[int]]) -> Any:
+    """psum gradients bucket-by-bucket in a fixed, compiler-visible order."""
+    leaves, tree = jax.tree_util.tree_flatten(grads)
+    out = list(leaves)
+    for bucket in buckets:
+        reduced = jax.lax.psum(tuple(out[i] for i in bucket), axis)
+        for i, g in zip(bucket, reduced):
+            out[i] = g
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+def make_manual_dp_step(loss_fn: Callable, optimizer_apply: Callable,
+                        mesh: Mesh, axis: str = "data",
+                        bucket_bytes: int = 32 << 20):
+    """Returns step(params, opt, batch) with replicated params and manually
+    scheduled (bucketed) gradient reduction."""
+
+    def step(params, opt, batch):
+        def shard_body(params, opt, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            buckets = make_buckets(grads, bucket_bytes)
+            grads = bucketed_psum(grads, axis, buckets)
+            n = jax.lax.psum(jnp.ones(()), axis)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            params, opt, gnorm = optimizer_apply(params, grads, opt)
+            loss = jax.lax.pmean(loss, axis)
+            return params, opt, dict(metrics, loss=loss, gnorm=gnorm)
+
+        return jax.shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(P(), P(), P(axis)),
+            out_specs=(P(), P(), P()),
+            check_vma=False)(params, opt, batch)
+
+    return step

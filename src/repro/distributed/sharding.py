@@ -1,0 +1,157 @@
+"""Parameter / input / cache sharding rules.
+
+Baseline scheme (DESIGN.md §5): tensor parallelism on the ``model`` axis
+(megatron column->row for MLPs and attention heads; vocab-sharded
+embeddings; expert- or ffn-parallel MoE), batch on ``pod`` x ``data``.
+Rules are *name + trailing-shape* driven over the parameter pytree, with a
+divisibility guard: an axis only shards when the dimension divides evenly —
+the guard is what lets one rule set serve every architecture and mesh.
+"""
+from __future__ import annotations
+
+import os
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+Params = Any
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(mesh: Mesh, shape, spec) -> P:
+    """Drop shard axes that do not divide the dimension."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None or dim % _axis_size(mesh, ax) != 0:
+            out.append(None)
+        else:
+            out.append(ax)
+    return P(*out)
+
+
+# trailing-dims rules, matched by parameter name (innermost dict key)
+_COL = (None, "model")     # shard outputs  (column parallel)
+_ROW = ("model", None)     # shard inputs   (row parallel)
+
+_NAME_RULES: Dict[str, Tuple] = {
+    "wq": _COL, "wk": _COL, "wv": _COL, "wg": _COL, "wz": _COL,
+    "in_proj": _COL,
+    "wo": _ROW, "out_proj": _ROW, "proj": _ROW,
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "tok": ("model", None),     # vocab-sharded embedding
+    "out": (None, "model"),     # vocab-sharded unembedding
+}
+
+
+def spec_for(cfg: ModelConfig, mesh: Mesh, path: Tuple[str, ...],
+             leaf) -> P:
+    name = path[-1]
+    shape = leaf.shape
+    in_moe = any(p in ("moe",) for p in path) and "shared" not in path
+    if in_moe:
+        if name == "router":
+            return P()
+        m = _axis_size(mesh, "model")
+        E = cfg.n_experts
+        ep = E % m == 0
+        # leading stack dims (layers) -> None
+        lead = (None,) * (len(shape) - 3)
+        if name in ("wi", "wg"):
+            rule = ("model", None, None) if ep else (None, None, "model")
+        elif name == "wo":
+            rule = ("model", None, None) if ep else (None, "model", None)
+        else:
+            return P()
+        return _guard(mesh, shape, lead + rule)
+    # xLSTM gate exceptions: tiny trailing dims stay replicated via guard
+    rule = _NAME_RULES.get(name)
+    if name == "wi" and len(shape) >= 2 and shape[-1] >= 512:
+        rule = _COL                       # MLP wi (large) vs mLSTM gate wi
+    elif name == "wi":
+        rule = None
+    if name == "wf":
+        rule = _COL if shape[-1] >= 512 else None
+    if rule is None:
+        return P()
+    lead = (None,) * (len(shape) - len(rule))
+    return _guard(mesh, shape, lead + tuple(rule))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Params):
+    """PartitionSpec pytree matching ``params_shape`` (a shape pytree)."""
+    flat, tree = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        specs.append(spec_for(cfg, mesh, keys, leaf))
+    return jax.tree_util.tree_unflatten(tree, specs)
+
+
+def batch_spec(mesh: Mesh) -> Tuple:
+    if "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return ("data",)
+
+
+def input_specs_sharding(cfg: ModelConfig, mesh: Mesh, specs: Dict):
+    """Shardings for the model input dict (batch on pod x data)."""
+    b = batch_spec(mesh)
+    out = {}
+    for k, v in specs.items():
+        spec = (b,) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, _guard(mesh, v.shape, spec))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Any:
+    """Decode-state sharding: batch on data axes, kv-heads/heads on model
+    when divisible (the guard demotes otherwise)."""
+    b = batch_spec(mesh)
+
+    def one(path, leaf):
+        keys = tuple(getattr(k, "key", str(k)) for k in path)
+        shape = leaf.shape
+        name = keys[-1]
+        if name == "enc_out":
+            return _guard(mesh, shape, (b, None, "model"))
+        if name in ("k", "v"):        # [L, B, T, Hkv, dh]
+            if os.environ.get("REPRO_KV_SHARD") == "seq":
+                # §Perf hillclimb: kv-head count rarely divides the model
+                # axis; sharding the *sequence* instead keeps the cache
+                # distributed (memory) and turns the decode all-gather into
+                # a partial-softmax reduction (collective).
+                return _guard(mesh, shape, (None, b, "model", None, None))
+            return _guard(mesh, shape, (None, b, None, "model", None))
+        if name in ("ak", "av"):      # [n_super, B, T, Hkv, dh]
+            return _guard(mesh, shape, (None, b, None, "model", None))
+        if name == "ssm":             # [n_super, inner, B, H, N, P]
+            return _guard(mesh, shape, (None, None, b, "model", None, None))
+        if name == "tail_ssm":
+            return _guard(mesh, shape, (None, b, "model", None, None))
+        if name in ("mC", "mn"):      # [ns, inner, B, H, ...]
+            return _guard(mesh, shape,
+                          (None, None, b, "model") + (None,) * (len(shape) - 4))
+        if name in ("sc", "sn"):      # [ns, B, d]
+            return _guard(mesh, shape, (None, b, "model"))
+        return P()
+
+    flat, tree = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        tree, [one(p, l) for p, l in flat])
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,51 @@
+"""Jitted wrappers around the Pallas kernels.
+
+``make_vcycle`` binds a compiled :class:`~repro.core.compile.Program` to the
+Pallas Vcycle kernel with core-count padding to the tile size, and adapts the
+(regs, spads, gmem, flags, tags, counters) carry used by ``core.bsp.Machine``.
+Programs with privileged off-chip traffic (GLD/GST) fall back to the jnp
+engine — the privileged core is special in the paper too (§5.3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .vcycle import DEFAULT_TILE, vcycle_pallas
+
+
+def make_vcycle(program, C: int, interpret: bool = True,
+                tile: int = DEFAULT_TILE) -> Callable:
+    """Returns vcycle(carry) -> (carry, trace) on the Pallas path."""
+    if program.has_global:
+        raise ValueError(
+            "Pallas path does not execute privileged GLD/GST programs; "
+            "use backend='jnp' (the paper's privileged core is also special)")
+    tile = min(tile, max(1, C))
+    Cp = ((C + tile - 1) // tile) * tile
+    code = np.zeros((program.code.shape[1], Cp, 7), dtype=np.int32)
+    code[:, :C] = program.code[:C].transpose(1, 0, 2)
+    code_j = jnp.asarray(code)
+    luts_j = jnp.asarray(
+        np.pad(program.luts[:C], ((0, Cp - C), (0, 0), (0, 0))),
+        dtype=jnp.uint32)
+
+    pad_c = Cp - C
+
+    @jax.jit
+    def vcycle(carry):
+        regs, spads, gmem, flags, tags, counters = carry
+        regs_p = jnp.pad(regs, ((0, pad_c), (0, 0))) if pad_c else regs
+        spads_p = jnp.pad(spads, ((0, pad_c), (0, 0))) if pad_c else spads
+        flags_p = jnp.pad(flags, ((0, pad_c),)) if pad_c else flags
+        regs_o, spads_o, flags_o, trace = vcycle_pallas(
+            code_j, luts_j, regs_p, spads_p, flags_p,
+            tile=tile, interpret=interpret)
+        carry = (regs_o[:C], spads_o[:C], gmem, flags_o[:C], tags, counters)
+        return carry, trace[:, :C]
+
+    return vcycle

@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``vcycle_ref`` executes one Vcycle (the slot loop, *without* the BSP
+exchange) for a tile of cores — the reference the Pallas kernel in
+``vcycle.py`` must match bit-exactly for every shape/dtype sweep in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.isa import Op
+
+U32 = jnp.uint32
+MASK = jnp.uint32(0xFFFF)
+
+
+def slot_ref(code_t: jax.Array, luts: jax.Array, regs: jax.Array,
+             spads: jax.Array, flags: jax.Array,
+             ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Execute one slot for all lanes (no global memory — the privileged
+    off-chip path stays in the jnp engine).
+
+    code_t: [C, 7] int32; luts: [C, L, 16] uint32; regs: [C, R] uint32;
+    spads: [C, S] uint32; flags: [C] uint32.
+    Returns (regs, spads, flags, result).
+    """
+    C = regs.shape[0]
+    S = spads.shape[1]
+    ar = jnp.arange(C)
+    op = code_t[:, 0]
+    dst = code_t[:, 1]
+    imm = code_t[:, 6].astype(U32)
+    v1 = regs[ar, code_t[:, 2]]
+    v2 = regs[ar, code_t[:, 3]]
+    v3 = regs[ar, code_t[:, 4]]
+    v4 = regs[ar, code_t[:, 5]]
+
+    add3 = v1 + v2 + v3
+    sub3 = v1 - v2 - v3
+    prod = v1 * v2
+    shamt = imm & 15
+    sgn = ((v1 ^ 0x8000) - 0x8000).astype(jnp.int32)
+
+    tt = luts[ar, jnp.minimum(imm, luts.shape[1] - 1)]
+    nv1, nv2, nv3, nv4 = (~v1) & MASK, (~v2) & MASK, (~v3) & MASK, (~v4) & MASK
+    lut_out = jnp.zeros((C,), U32)
+    for p in range(16):
+        m = (v1 if p & 1 else nv1) & (v2 if p & 2 else nv2) \
+            & (v3 if p & 4 else nv3) & (v4 if p & 8 else nv4)
+        lut_out = lut_out | (m & tt[:, p])
+
+    ld_addr = v1 % S
+    ld_val = spads[ar, ld_addr]
+
+    branches = [
+        (Op.MOV, v1),
+        (Op.MOVI, imm & MASK),
+        (Op.ADD, (v1 + v2) & MASK),
+        (Op.ADDC, add3 & MASK),
+        (Op.CARRY, (add3 >> 16) & MASK),
+        (Op.SUB, (v1 - v2) & MASK),
+        (Op.SUBB, sub3 & MASK),
+        (Op.BORROW, (v1 < v2 + v3).astype(U32)),
+        (Op.MUL, prod & MASK),
+        (Op.MULH, (prod >> 16) & MASK),
+        (Op.AND, v1 & v2),
+        (Op.OR, v1 | v2),
+        (Op.XOR, v1 ^ v2),
+        (Op.NOT, (~v1) & MASK),
+        (Op.MUX, jnp.where(v1 != 0, v2, v3)),
+        (Op.SEQ, (v1 == v2).astype(U32)),
+        (Op.SNE, (v1 != v2).astype(U32)),
+        (Op.SLTU, (v1 < v2).astype(U32)),
+        (Op.SLL, (v1 << shamt) & MASK),
+        (Op.SRL, v1 >> shamt),
+        (Op.SRA, (sgn >> shamt).astype(U32) & MASK),
+        (Op.SLLV, (v1 << (v2 & 15)) & MASK),
+        (Op.SRLV, v1 >> (v2 & 15)),
+        (Op.SLICE, (v1 >> (imm >> 5)) & ((U32(1) << (imm & 31)) - 1)),
+        (Op.LUT, lut_out),
+        (Op.LD, ld_val),
+        (Op.SEND, v1),
+    ]
+    result = jnp.zeros((C,), U32)
+    for code_op, val in branches:
+        result = jnp.where(op == int(code_op), val, result)
+
+    no_write = ((op == int(Op.NOP)) | (op == int(Op.ST)) |
+                (op == int(Op.GST)) | (op == int(Op.EXPECT)) |
+                (op == int(Op.SEND)) | (dst == 0))
+    wdst = jnp.where(no_write, 0, dst)
+    regs = regs.at[ar, wdst].set(jnp.where(no_write, regs[ar, 0], result))
+
+    st_mask = (op == int(Op.ST)) & (v3 != 0)
+    st_addr = v1 % S
+    spads = spads.at[ar, st_addr].set(
+        jnp.where(st_mask, v2, spads[ar, st_addr]))
+
+    exc = (op == int(Op.EXPECT)) & (v1 != v2)
+    flags = jnp.where((flags == 0) & exc, imm, flags)
+    return regs, spads, flags, result & MASK
+
+
+def vcycle_ref(code: jax.Array, luts: jax.Array, regs: jax.Array,
+               spads: jax.Array, flags: jax.Array,
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One full Vcycle. code: [T, C, 7]. Returns (regs, spads, flags,
+    trace[T, C])."""
+    def step(carry, code_t):
+        regs, spads, flags = carry
+        regs, spads, flags, res = slot_ref(code_t, luts, regs, spads, flags)
+        return (regs, spads, flags), res
+
+    (regs, spads, flags), trace = jax.lax.scan(step, (regs, spads, flags),
+                                               code)
+    return regs, spads, flags, trace
+
+
+def flash_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True) -> jax.Array:
+    """Oracle for kernels/flash_attention.py: plain softmax attention.
+    q, k, v: [BH, S, dh]."""
+    import numpy as np
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

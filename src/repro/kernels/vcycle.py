@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: the Vcycle slot loop for a tile of cores.
+
+This is the compute hot-spot of the whole system — the inner interpreter that
+executes ``t_compute`` slots for every core, every simulated RTL cycle. The
+TPU mapping (DESIGN.md §2):
+
+  * a *tile* of cores lives in one grid step; the tile's register files
+    ([tile, R] uint32) and scratchpads ([tile, S]) are VMEM-resident for the
+    entire Vcycle — the analogue of Manticore keeping the register file in
+    BRAMs next to the ALU;
+  * the instruction stream tile ([T, tile, 7]) streams HBM->VMEM through the
+    BlockSpec pipeline — the analogue of the URAM instruction memory;
+  * every slot executes all opcodes on the whole tile and selects by opcode
+    (VPU-friendly compute-all-select; a NOp lane is a masked lane);
+  * the per-slot result trace ([T, tile]) is written back so the BSP exchange
+    (done by the caller — ``core.bsp``/``core.grid``) can route SEND values.
+
+Block shapes are chosen so the working set fits VMEM with MXU/VPU-aligned
+lanes: tile=8 cores x 2048 regs x 4B = 64 KiB registers, 16384-word
+scratchpads = 512 KiB, and a T<=4096 instruction block = 896 KiB — ~1.5 MiB
+per grid step, leaving headroom for double buffering.
+
+Validated in ``interpret=True`` mode against ``ref.vcycle_ref`` (bit-exact)
+— this container has no TPU; the kernel is the TPU *target*.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.isa import Op
+
+U32 = jnp.uint32
+MASK = jnp.uint32(0xFFFF)
+
+DEFAULT_TILE = 8
+
+
+def _vcycle_kernel(code_ref, luts_ref, regs_in_ref, spads_in_ref,
+                   flags_in_ref, regs_out_ref, spads_out_ref, flags_out_ref,
+                   trace_ref, *, num_slots: int):
+    """Kernel body. Shapes (per tile):
+    code [T, tile, 7] i32 | luts [tile, L, 16] u32 | regs [tile, R] u32 |
+    spads [tile, S] u32 | flags [tile] u32 | trace [T, tile] u32.
+    """
+    luts = luts_ref[...]
+    tile = regs_in_ref.shape[0]
+    S = spads_in_ref.shape[1]
+    L = luts.shape[1]
+    ar = jnp.arange(tile)
+
+    def body(t, carry):
+        regs, spads, flags = carry
+        instr = code_ref[t]                       # [tile, 7] int32
+        op = instr[:, 0]
+        dst = instr[:, 1]
+        imm = instr[:, 6].astype(U32)
+        v1 = regs[ar, instr[:, 2]]
+        v2 = regs[ar, instr[:, 3]]
+        v3 = regs[ar, instr[:, 4]]
+        v4 = regs[ar, instr[:, 5]]
+
+        add3 = v1 + v2 + v3
+        sub3 = v1 - v2 - v3
+        prod = v1 * v2
+        shamt = imm & 15
+        sgn = ((v1 ^ 0x8000) - 0x8000).astype(jnp.int32)
+
+        tt = luts[ar, jnp.minimum(imm, L - 1)]    # [tile, 16]
+        nv1, nv2 = (~v1) & 0xFFFF, (~v2) & 0xFFFF
+        nv3, nv4 = (~v3) & 0xFFFF, (~v4) & 0xFFFF
+        lut_out = jnp.zeros((tile,), U32)
+        for p in range(16):
+            m = (v1 if p & 1 else nv1) & (v2 if p & 2 else nv2) \
+                & (v3 if p & 4 else nv3) & (v4 if p & 8 else nv4)
+            lut_out = lut_out | (m & tt[:, p])
+
+        ld_addr = v1 % S
+        ld_val = spads[ar, ld_addr]
+
+        branches = [
+            (Op.MOV, v1),
+            (Op.MOVI, imm & 0xFFFF),
+            (Op.ADD, (v1 + v2) & 0xFFFF),
+            (Op.ADDC, add3 & 0xFFFF),
+            (Op.CARRY, (add3 >> 16) & 0xFFFF),
+            (Op.SUB, (v1 - v2) & 0xFFFF),
+            (Op.SUBB, sub3 & 0xFFFF),
+            (Op.BORROW, (v1 < v2 + v3).astype(U32)),
+            (Op.MUL, prod & 0xFFFF),
+            (Op.MULH, (prod >> 16) & 0xFFFF),
+            (Op.AND, v1 & v2),
+            (Op.OR, v1 | v2),
+            (Op.XOR, v1 ^ v2),
+            (Op.NOT, (~v1) & 0xFFFF),
+            (Op.MUX, jnp.where(v1 != 0, v2, v3)),
+            (Op.SEQ, (v1 == v2).astype(U32)),
+            (Op.SNE, (v1 != v2).astype(U32)),
+            (Op.SLTU, (v1 < v2).astype(U32)),
+            (Op.SLL, (v1 << shamt) & 0xFFFF),
+            (Op.SRL, v1 >> shamt),
+            (Op.SRA, (sgn >> shamt).astype(U32) & 0xFFFF),
+            (Op.SLLV, (v1 << (v2 & 15)) & 0xFFFF),
+            (Op.SRLV, v1 >> (v2 & 15)),
+            (Op.SLICE, (v1 >> (imm >> 5)) & ((1 << (imm & 31)) - 1)),
+            (Op.LUT, lut_out),
+            (Op.LD, ld_val),
+            (Op.SEND, v1),
+        ]
+        result = jnp.zeros((tile,), U32)
+        for code_op, val in branches:
+            result = jnp.where(op == int(code_op), val, result)
+        result = result & 0xFFFF
+
+        no_write = ((op == int(Op.NOP)) | (op == int(Op.ST)) |
+                    (op == int(Op.GST)) | (op == int(Op.EXPECT)) |
+                    (op == int(Op.SEND)) | (dst == 0))
+        wdst = jnp.where(no_write, 0, dst)
+        regs = regs.at[ar, wdst].set(jnp.where(no_write, regs[ar, 0], result))
+
+        st_mask = (op == int(Op.ST)) & (v3 != 0)
+        st_addr = v1 % S
+        spads = spads.at[ar, st_addr].set(
+            jnp.where(st_mask, v2, spads[ar, st_addr]))
+
+        exc = (op == int(Op.EXPECT)) & (v1 != v2)
+        flags = jnp.where((flags == 0) & exc, imm, flags)
+
+        trace_ref[t] = result
+        return regs, spads, flags
+
+    regs, spads, flags = jax.lax.fori_loop(
+        0, num_slots, body,
+        (regs_in_ref[...], spads_in_ref[...], flags_in_ref[...]))
+    regs_out_ref[...] = regs
+    spads_out_ref[...] = spads
+    flags_out_ref[...] = flags
+
+
+def vcycle_pallas(code: jax.Array, luts: jax.Array, regs: jax.Array,
+                  spads: jax.Array, flags: jax.Array,
+                  tile: int = DEFAULT_TILE, interpret: bool = True,
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One Vcycle over all cores. code: [T, C, 7] int32 (C % tile == 0).
+    Returns (regs, spads, flags, trace[T, C])."""
+    T, C, _ = code.shape
+    assert C % tile == 0, (C, tile)
+    R = regs.shape[1]
+    S = spads.shape[1]
+    L = luts.shape[1]
+    grid = (C // tile,)
+
+    kernel = functools.partial(_vcycle_kernel, num_slots=T)
+    out_shapes = (
+        jax.ShapeDtypeStruct((C, R), regs.dtype),
+        jax.ShapeDtypeStruct((C, S), spads.dtype),
+        jax.ShapeDtypeStruct((C,), flags.dtype),
+        jax.ShapeDtypeStruct((T, C), regs.dtype),
+    )
+    regs_o, spads_o, flags_o, trace = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, tile, 7), lambda i: (0, i, 0)),
+            pl.BlockSpec((tile, L, 16), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, R), lambda i: (i, 0)),
+            pl.BlockSpec((tile, S), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, R), lambda i: (i, 0)),
+            pl.BlockSpec((tile, S), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((T, tile), lambda i: (0, i)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(code, luts, regs, spads, flags)
+    return regs_o, spads_o, flags_o, trace

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is pure data parallelism whose gradient all-reduce crosses the
+inter-pod links (optionally int8-compressed, see optim/adamw.py).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Mesh over whatever devices exist (CPU tests / small runs)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,123 @@
+"""Step builders: train_step / prefill_step / decode_step as pjit-able pure
+functions with full input/output shardings.
+
+Every step is a *statically scheduled superstep* in the paper's sense: all
+collectives are fixed at trace time by the sharding specs — there is no
+dynamic synchronization anywhere (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed import sharding as SH
+from ..distributed.ctx import mesh_context
+from ..models.config import ModelConfig
+from ..models.model import Model, build
+from ..optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, compress_grads: bool = False):
+    """Returns (step_fn, in_shardings, out_shardings, abstract args).
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+    model = build(cfg)
+    p_shapes = model.abstract_params()
+    p_specs = SH.param_specs(cfg, mesh, p_shapes)
+
+    def train_step(params, opt, batch):
+        with mesh_context(mesh):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            if compress_grads and opt.ef is not None:
+                q, s, ef = adamw.compress_grads(grads, opt.ef)
+                grads = jax.tree.map(adamw.dequantize_int8, q, s)
+                opt = opt._replace(ef=ef)
+            params, opt, gnorm = adamw.apply(params, grads, opt)
+            metrics = dict(metrics, loss=loss, gnorm=gnorm)
+            return params, opt, metrics
+
+    opt_shapes = jax.eval_shape(
+        lambda p: adamw.init(p, compress=compress_grads), p_shapes)
+    # optimizer state mirrors the param specs leaf-wise; step is replicated
+    o_specs = adamw.AdamWState(
+        step=P(),
+        m=p_specs, v=p_specs,
+        ef=p_specs if compress_grads else None)
+
+    return model, train_step, p_shapes, p_specs, opt_shapes, o_specs
+
+
+def lower_train(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                global_batch: int, compress: bool = False):
+    model, step, p_shapes, p_specs, opt_shapes, o_specs = \
+        make_train_step(cfg, mesh, compress)
+    batch_specs = model.input_specs(seq_len, global_batch, "train")
+    batch_sh = SH.input_specs_sharding(cfg, mesh, batch_specs)
+    p_sh = SH.to_named(mesh, p_specs)
+    o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, batch_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1))
+    with mesh_context(mesh):
+        lowered = jitted.lower(p_shapes, opt_shapes, batch_specs)
+    return lowered, model
+
+
+def make_serve_steps(cfg: ModelConfig, mesh: Mesh):
+    model = build(cfg)
+    p_shapes = model.abstract_params()
+    p_specs = SH.param_specs(cfg, mesh, p_shapes)
+
+    def prefill_step(params, batch, cache):
+        with mesh_context(mesh):
+            return model.prefill(params, batch, cache)
+
+    def decode_step(params, tokens, cache, pos):
+        with mesh_context(mesh):
+            logits, cache = model.decode_step(params, tokens, cache, pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt[:, None], cache
+
+    return model, prefill_step, decode_step, p_shapes, p_specs
+
+
+def lower_serve(cfg: ModelConfig, mesh: Mesh, seq_len: int,
+                global_batch: int, mode: str):
+    """mode: 'prefill' (full prompt) or 'decode' (1 token vs seq_len KV)."""
+    model, prefill_step, decode_step, p_shapes, p_specs = \
+        make_serve_steps(cfg, mesh)
+    p_sh = SH.to_named(mesh, p_specs)
+    cache_shapes = jax.eval_shape(
+        functools.partial(model.make_cache, global_batch, seq_len))
+    c_specs = SH.cache_specs(cfg, mesh, cache_shapes)
+    c_sh = SH.to_named(mesh, c_specs)
+
+    if mode == "prefill":
+        batch_specs = model.input_specs(seq_len, global_batch, "prefill")
+        batch_sh = SH.input_specs_sharding(cfg, mesh, batch_specs)
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(p_sh, batch_sh, c_sh),
+                         out_shardings=(None, c_sh))
+        with mesh_context(mesh):
+            lowered = jitted.lower(p_shapes, batch_specs, cache_shapes)
+    else:
+        tok_specs = model.input_specs(seq_len, global_batch, "decode")
+        tok_sh = SH.input_specs_sharding(cfg, mesh, tok_specs)
+        jitted = jax.jit(decode_step,
+                         in_shardings=(p_sh, tok_sh["tokens"], c_sh, None),
+                         out_shardings=(tok_sh["tokens"], c_sh),
+                         donate_argnums=(2,))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh_context(mesh):
+            lowered = jitted.lower(p_shapes, tok_specs["tokens"],
+                                   cache_shapes, pos)
+    return lowered, model

@@ -1,0 +1,258 @@
+"""Core neural layers as pure functions over explicit parameter pytrees.
+
+Everything is written against abstract shapes (dry-run lowers with
+ShapeDtypeStruct params), supports GQA (+qk_norm, QKV bias), RoPE and M-RoPE,
+sliding-window masks, and single-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.ctx import batch_axes, shard_act
+from .config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2) / d_head))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float,
+               m_rope: bool = False) -> jax.Array:
+    """x: [B, S, H, dh]; pos: [B, S] (or [3, B, S] for M-RoPE sections)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # [dh/2]
+    if m_rope:
+        # M-RoPE (Qwen2-VL): the rotary dims are split into 3 sections
+        # (temporal / height / width), each rotated by its own position id.
+        if pos.ndim == 2:
+            pos = jnp.stack([pos, pos, pos], axis=0)
+        n = freqs.shape[0]
+        s1, s2 = n - 2 * (n // 3), n // 3
+        sec = jnp.concatenate([
+            jnp.zeros((s1,), jnp.int32),
+            jnp.ones((s2,), jnp.int32),
+            jnp.full((n - s1 - s2,), 2, jnp.int32)])
+        pos_sec = pos.transpose(1, 2, 0)[..., sec]       # [B, S, dh/2]
+        ang = pos_sec.astype(jnp.float32) * freqs        # [B, S, dh/2]
+    else:
+        ang = pos.astype(jnp.float32)[..., None] * freqs  # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    dt = _dtype(cfg)
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), dt)
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(dh, dt)
+        p["knorm"] = rmsnorm_init(dh, dt)
+    return p
+
+
+def _qkv(p: Dict, cfg: ModelConfig, x: jax.Array,
+         pos: Optional[jax.Array], rope: bool = True):
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(p["knorm"], k, cfg.norm_eps)
+    if rope and pos is not None:
+        q = apply_rope(q, pos, cfg.rope_theta, cfg.m_rope)
+        k = apply_rope(k, pos, cfg.rope_theta, cfg.m_rope)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Grouped-query attention core. q: [B,S,H,dh]; k,v: [B,T,Hkv,dh]."""
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    G = H // k.shape[2]
+    q = q.reshape(B, S, k.shape[2], G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H * dh)
+
+
+def causal_mask(S: int, T: int, window: Optional[int],
+                offset: int = 0) -> jax.Array:
+    """[1,1,1,S,T] mask; query i attends key j iff j <= i+offset and, with a
+    sliding window, j > i+offset-window."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > (qi - window)
+    return m[None, None, None]
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, window, chunk: int,
+                  causal: bool = True):
+    """Query-chunked attention (§Perf hillclimb): identical math, but the
+    [S, S] score matrix only ever exists [chunk, S] at a time — peak
+    activation memory drops by S/chunk. (The Pallas flash-attention kernel
+    is the TPU-target version of the same idea; this is its XLA-level
+    formulation used by the dry-run.)"""
+    B, S, H, dh = q.shape
+    nq = S // chunk
+
+    def one(i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        mask = causal_mask(chunk, S, window, offset=i * chunk) \
+            if causal else None
+        return _sdpa(qb, k, v, mask, cfg)
+
+    out = jax.lax.map(one, jnp.arange(nq))          # [nq, B, chunk, H*dh]
+    return out.transpose(1, 0, 2, 3).reshape(B, S, H * dh)
+
+
+def attention_fwd(p: Dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                  window: Optional[int] = None,
+                  causal: bool = True) -> jax.Array:
+    """Full self-attention (training / prefill)."""
+    q, k, v = _qkv(p, cfg, x, pos)
+    q = shard_act(q, batch_axes(), None, "model", None)
+    k = shard_act(k, batch_axes(), None, None, None)
+    w = window if window else cfg.swa_window
+    chunk = int(os.environ.get("REPRO_ATTN_CHUNK", "0"))
+    if chunk and x.shape[1] > chunk and x.shape[1] % chunk == 0:
+        out = _sdpa_chunked(q, k, v, cfg, w, chunk, causal)
+    else:
+        mask = causal_mask(x.shape[1], x.shape[1], w) if causal else None
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"]
+
+
+def cross_attention_fwd(p: Dict, cfg: ModelConfig, x: jax.Array,
+                        kv_src: jax.Array) -> jax.Array:
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    B, S, _ = x.shape
+    dh = cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (kv_src @ p["wk"]).reshape(B, kv_src.shape[1], cfg.n_kv_heads, dh)
+    v = (kv_src @ p["wv"]).reshape(B, kv_src.shape[1], cfg.n_kv_heads, dh)
+    out = _sdpa(q, k, v, None, cfg)
+    return out @ p["wo"]
+
+
+def attention_decode(p: Dict, cfg: ModelConfig, x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array,
+                     window: Optional[int] = None) -> Tuple[jax.Array, ...]:
+    """One-token decode. x: [B,1,d]; cache_[kv]: [B,T,Hkv,dh]; pos: [B,1].
+    Returns (out, new_cache_k, new_cache_v)."""
+    q, k, v = _qkv(p, cfg, x, pos)
+    # M-RoPE positions are [3, B, 1]; the temporal section indexes the cache
+    pos_t = pos[0] if pos.ndim == 3 else pos
+    T = cache_k.shape[1]
+    slot = pos_t[0, 0] % T  # ring buffer for windowed caches
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    kj = jnp.arange(T)[None, :]
+    w = window if window else cfg.swa_window
+    if w is not None and T <= w:
+        # ring buffer: once pos >= T every slot is a valid in-window entry
+        valid = (kj <= pos_t[:, :1]) | (pos_t[:, :1] >= T)
+    else:
+        valid = kj <= pos_t[:, :1]
+    mask = valid[:, None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ------------------------------------------------------------------ mlp ----
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    dt = _dtype(cfg)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {"wi": dense_init(ks[0], d, f, dt),
+                "wg": dense_init(ks[1], d, f, dt),
+                "wo": dense_init(ks[2], f, d, dt)}
+    return {"wi": dense_init(ks[0], d, f, dt),
+            "wo": dense_init(ks[2], f, d, dt)}
+
+
+def mlp_fwd(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["wi"]) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    h = shard_act(h, batch_axes(), None, "model")
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------ embedding ----
+def embed_init(key, cfg: ModelConfig) -> Dict:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab, cfg.d_model), jnp.float32)
+                 * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(k2, cfg.d_model, cfg.vocab, dt)
+    return p
+
+
+def embed(p: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    logits = x @ w
+    return shard_act(logits, batch_axes(), None, "model")

@@ -1,0 +1,237 @@
+"""Unified model API: build(cfg) -> Model with init / loss / prefill /
+decode_step / make_cache / input_specs.
+
+The same entry points serve CPU smoke tests (tiny real arrays), the
+production dry-run (ShapeDtypeStruct params, 512 fake devices), training and
+serving drivers.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.ctx import batch_axes, shard_act
+from .config import ModelConfig
+from . import layers as L
+from . import transformer as T
+
+Params = Dict[str, Any]
+
+
+def _positions(B: int, S: int, offset=0, m_rope: bool = False):
+    pos = jnp.arange(S)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if m_rope:
+        return jnp.stack([pos, pos, pos], 0)  # text-only: 3 equal sections
+    return pos
+
+
+def _decode_pos(B: int, pos_scalar, m_rope: bool = False):
+    pos = jnp.broadcast_to(jnp.asarray(pos_scalar)[None, None], (B, 1))
+    if m_rope:
+        return jnp.stack([pos, pos, pos], 0)
+    return pos
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init ----
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        if cfg.block == "mamba2":
+            return T.zamba2_init(rng, cfg)
+        if cfg.block == "xlstm":
+            return T.xlstm_init(rng, cfg)
+        if cfg.enc_dec:
+            return T.encdec_init(rng, cfg)
+        return T.decoder_init(rng, cfg)
+
+    def abstract_params(self) -> Params:
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+        return shapes
+
+    # ---------------------------------------------------------- forward ----
+    def _trunk(self, params: Params, x, pos, state=None, decode=False,
+               enc_out=None):
+        cfg = self.cfg
+        if cfg.block == "mamba2":
+            return T.zamba2_fwd(cfg, params, x, pos, state, decode=decode)
+        if cfg.block == "xlstm":
+            return T.xlstm_fwd(cfg, params, x, pos, state)
+        if cfg.enc_dec:
+            h, caches = T.encdec_fwd(cfg, params, x, pos, enc_out, state)
+            return h, caches, jnp.zeros((), jnp.float32)
+        return T.decoder_fwd(cfg, params, x, pos, state)
+
+    def _embed_inputs(self, params: Params, batch: Dict) -> Tuple:
+        """Returns (x, pos, enc_out, label_offset)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = L.embed(params["embed"], tokens)
+        enc_out = None
+        offset = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            # stubbed vision frontend: precomputed patch embeddings prefix
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], 1)
+            offset = batch["patches"].shape[1]
+        if cfg.enc_dec:
+            frames = batch["frames"].astype(x.dtype)
+            pe = _sinusoid(frames.shape[1], cfg.d_model, x.dtype)
+            enc_out = T.encoder_fwd(cfg, params, frames + pe)
+        pos = _positions(B, x.shape[1], m_rope=cfg.m_rope)
+        x = shard_act(x, batch_axes(), None, None)
+        return x, pos, enc_out, offset
+
+    # ------------------------------------------------------------- loss ----
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        cfg = self.cfg
+        x, pos, enc_out, offset = self._embed_inputs(params, batch)
+        h, _, aux = self._trunk(params, x, pos, enc_out=enc_out)
+        if offset:
+            h = h[:, offset:]
+        logits = L.unembed(params["embed"], cfg, h).astype(jnp.float32)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = (logz - gold).mean()
+        zloss = 1e-4 * jnp.square(logz).mean()
+        total = nll + zloss + 1e-2 * aux
+        return total, {"nll": nll, "aux": aux, "zloss": zloss}
+
+    # ---------------------------------------------------------- serving ----
+    def make_cache(self, B: int, ctx: int) -> Any:
+        """Decode-state pytree sized for a context of ``ctx`` tokens."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.block == "mamba2":
+            inner = cfg.attn_every
+            n_super = cfg.n_layers // inner
+            tail = cfg.n_layers - n_super * inner
+            H = 2 * cfg.d_model // cfg.ssm_headdim
+            Tw = min(ctx, T.ZAMBA_WINDOW)
+            st = {
+                "ssm": jnp.zeros((n_super, inner, B, H, cfg.ssm_state,
+                                  cfg.ssm_headdim), jnp.float32),
+                "ak": jnp.zeros((n_super, B, Tw, cfg.n_kv_heads, cfg.d_head),
+                                dt),
+                "av": jnp.zeros((n_super, B, Tw, cfg.n_kv_heads, cfg.d_head),
+                                dt),
+            }
+            if tail:
+                st["tail_ssm"] = jnp.zeros(
+                    (tail, B, H, cfg.ssm_state, cfg.ssm_headdim), jnp.float32)
+            return st
+        if cfg.block == "xlstm":
+            inner = cfg.slstm_every - 1
+            n_super = cfg.n_layers // cfg.slstm_every
+            H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+            return {
+                "mC": jnp.zeros((n_super, inner, B, H, dh, dh), jnp.float32),
+                "mn": jnp.zeros((n_super, inner, B, H, dh), jnp.float32),
+                "sc": jnp.zeros((n_super, B, cfg.d_model), jnp.float32),
+                "sn": jnp.ones((n_super, B, cfg.d_model), jnp.float32),
+            }
+        Tw = min(ctx, cfg.swa_window) if cfg.swa_window else ctx
+        Lc = cfg.n_layers
+        k = jnp.zeros((Lc, B, Tw, cfg.n_kv_heads, cfg.d_head), dt)
+        v = jnp.zeros_like(k)
+        if cfg.enc_dec:
+            return {"k": k, "v": v,
+                    "enc_out": jnp.zeros((B, cfg.n_frames, cfg.d_model), dt)}
+        return {"k": k, "v": v}
+
+    def prefill(self, params: Params, batch: Dict, cache: Any
+                ) -> Tuple[jax.Array, Any]:
+        """Run the full prompt, return (last-token logits, primed cache).
+
+        Attention families capture per-layer K/V ring caches in the same
+        pass (no attention recompute); recurrent families carry their state
+        out of the sequence scan directly."""
+        cfg = self.cfg
+        x, pos, enc_out, offset = self._embed_inputs(params, batch)
+        if cfg.block == "mamba2":
+            Tw = cache["ak"].shape[2]
+            h, st, _ = T.zamba2_fwd(cfg, params, x, pos, capture_kv=Tw)
+            logits = L.unembed(params["embed"], cfg,
+                               h[:, -1:]).astype(jnp.float32)
+            return logits, st
+        if cfg.block == "xlstm":
+            h, st, _ = self._trunk(params, x, pos)
+            logits = L.unembed(params["embed"], cfg,
+                               h[:, -1:]).astype(jnp.float32)
+            return logits, st
+        Tw = cache["k"].shape[2]
+        if cfg.enc_dec:
+            h, ks, vs = T.encdec_prefill(cfg, params, x, pos, enc_out, Tw)
+            logits = L.unembed(params["embed"], cfg,
+                               h[:, -1:]).astype(jnp.float32)
+            return logits, {"k": ks, "v": vs, "enc_out": enc_out}
+        h, ks, vs, _ = T.decoder_prefill(cfg, params, x, pos, Tw)
+        logits = L.unembed(params["embed"], cfg,
+                           h[:, -1:]).astype(jnp.float32)
+        return logits, {"k": ks, "v": vs}
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Any,
+                    pos_scalar) -> Tuple[jax.Array, Any]:
+        """tokens: [B, 1] -> (logits [B,1,V], new cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = L.embed(params["embed"], tokens)
+        pos = _decode_pos(B, pos_scalar, cfg.m_rope)
+        if cfg.block == "mamba2":
+            h, st, _ = self._trunk(params, x, pos, state=cache, decode=True)
+            return L.unembed(params["embed"], cfg, h).astype(jnp.float32), st
+        if cfg.block == "xlstm":
+            h, st, _ = self._trunk(params, x, pos, state=cache)
+            return L.unembed(params["embed"], cfg, h).astype(jnp.float32), st
+        caches = (cache["k"], cache["v"])
+        enc_out = cache.get("enc_out") if cfg.enc_dec else None
+        h, (ck, cv), _ = self._trunk(params, x, pos, state=caches,
+                                     decode=True, enc_out=enc_out)
+        out = {"k": ck, "v": cv}
+        if cfg.enc_dec:
+            out["enc_out"] = cache["enc_out"]
+        return L.unembed(params["embed"], cfg, h).astype(jnp.float32), out
+
+    # ------------------------------------------------------ input specs ----
+    def input_specs(self, seq_len: int, global_batch: int,
+                    mode: str = "train") -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        B, S = global_batch, seq_len
+        dt = jnp.dtype(cfg.dtype)
+        sd = jax.ShapeDtypeStruct
+        toks = sd((B, S), jnp.int32)
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if mode == "train":
+            specs = {"tokens": toks, "labels": sd((B, S), jnp.int32)}
+        elif mode == "prefill":
+            specs = {"tokens": toks}
+        elif mode == "decode":
+            specs = {"tokens": sd((B, 1), jnp.int32)}
+        if cfg.family == "vlm" and mode in ("train", "prefill"):
+            specs["patches"] = sd((B, 256, cfg.d_model), dt)
+        if cfg.enc_dec and mode in ("train", "prefill"):
+            specs["frames"] = sd((B, cfg.n_frames, cfg.d_model), dt)
+        return specs
+
+
+def _sinusoid(S: int, d: int, dtype) -> jax.Array:
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    pe = np.concatenate([np.sin(ang), np.cos(ang)], -1)
+    return jnp.asarray(pe[None], dtype)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

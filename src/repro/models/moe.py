@@ -1,0 +1,195 @@
+"""Mixture-of-Experts with capacity-based static dispatch.
+
+Supports Mixtral-style (8 routed, top-2) and DeepSeek-MoE-style fine-grained
+routing (2 shared + 64 routed, top-6, small per-expert d_ff). Dispatch is the
+Mesh-TensorFlow one-hot formulation: static shapes, no sorting, so FLOPs are
+proportional to *active* experts (capacity-dropped tokens fall back to the
+shared/residual path) — this keeps MODEL_FLOPS / HLO_FLOPs honest in the
+roofline (no all-experts-for-all-tokens blowup).
+
+Sharding: experts go on the 'model' axis when divisible (expert parallelism);
+otherwise each expert's hidden dim is tensor-parallel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.ctx import batch_axes, shard_act
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def moe_init(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    f = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, d, f), jnp.float32)
+               * scale).astype(dt),
+        "wg": (jax.random.normal(ks[2], (E, d, f), jnp.float32)
+               * scale).astype(dt),
+        "wo": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+               / np.sqrt(f)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"wi": dense_init(kk[0], d, fs, dt),
+                       "wg": dense_init(kk[1], d, fs, dt),
+                       "wo": dense_init(kk[2], fs, d, dt)}
+    return p
+
+
+def _n_groups(B: int) -> int:
+    """§Perf hillclimb (REPRO_MOE_GROUPED=1): dispatch per data-parallel
+    group instead of globally. Global dispatch routes through a single
+    [T, E, C] tensor whose capacity C scales with the *global* token count
+    (all-to-all across the whole mesh); per-group dispatch keeps tokens
+    resident on their data shard — C drops by the group count and the
+    cross-shard traffic becomes expert-only."""
+    import os
+    if os.environ.get("REPRO_MOE_GROUPED") != "1":
+        return 1
+    from ..distributed.ctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    return g
+
+
+def moe_fwd(p: Dict, cfg: ModelConfig, x: jax.Array,
+            capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss)."""
+    B, S, d = x.shape
+    G = _n_groups(B)
+    if G > 1 and B % G == 0:
+        xg = x.reshape(G, (B // G) * S, d)
+        outs = _moe_groups(p, cfg, xg, capacity_factor)
+        y, aux = outs
+        return y.reshape(B, S, d), aux
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [T, K]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = E * jnp.sum(me * ce)
+
+    C = int(np.ceil(capacity_factor * T * K / E))
+    C = max(8, min(C, T))
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [T, K, E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(T * K, E), axis=0)
+                .reshape(T, K, E) - 1.0)
+    keep = (pos_in_e < C) & (onehot > 0)
+    slot = jnp.clip(pos_in_e, 0, C - 1).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * \
+        keep[..., None].astype(jnp.float32)                 # [T, K, E, C]
+
+    dispatch = slot_oh.sum(1)                               # [T, E, C]
+    combine = (slot_oh * gate_vals[..., None, None]).sum(1)  # [T, E, C]
+
+    xe = jnp.einsum("td,tec->ecd", xt.astype(jnp.float32),
+                    dispatch).astype(x.dtype)               # [E, C, d]
+    xe = shard_act(xe, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wi"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])             # [E, C, d]
+    ye = shard_act(ye, "model", None, None)
+    y = jnp.einsum("ecd,tec->td", ye.astype(jnp.float32), combine)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(xt @ sh["wi"]) * (xt @ sh["wg"])
+        y = y + (hs @ sh["wo"]).astype(jnp.float32)
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _moe_groups(p: Dict, cfg: ModelConfig, xg: jax.Array,
+                capacity_factor: float) -> Tuple[jax.Array, jax.Array]:
+    """Group-local dispatch: xg [G, Tg, d]; G rides the data axes."""
+    G, Tg, d = xg.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    xg = shard_act(xg, batch_axes(), None, None)
+
+    logits = xg.astype(jnp.float32) @ p["router"]            # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    me = probs.mean(axis=1)                                  # [G, E]
+    ce = jnp.zeros((G, E), jnp.float32)
+    ce = ce.at[jnp.arange(G)[:, None, None],
+               gate_idx].add(1.0 / (Tg * K))
+    aux = (E * (me * ce).sum(-1)).mean()
+
+    C = int(np.ceil(capacity_factor * Tg * K / E))
+    C = max(8, min(C, Tg))
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [G, Tg, K, E]
+    pos_in_e = (jnp.cumsum(onehot.reshape(G, Tg * K, E), axis=1)
+                .reshape(G, Tg, K, E) - 1.0)
+    keep = (pos_in_e < C) & (onehot > 0)
+    slot = jnp.clip(pos_in_e, 0, C - 1).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * \
+        keep[..., None].astype(jnp.float32)                  # [G,Tg,K,E,C]
+    dispatch = slot_oh.sum(2)                                # [G, Tg, E, C]
+    combine = (slot_oh * gate_vals[..., None, None]).sum(2)
+
+    import os
+    if os.environ.get("REPRO_MOE_SCATTER") == "1":
+        # §Perf hillclimb 2b: the one-hot dispatch *matmul* costs
+        # T*E*C*d FLOPs — thousands of times the expert FFNs. Scatter/
+        # gather does the same routing in O(T*K*d) bytes and ~0 FLOPs.
+        g_ar = jnp.arange(G)[:, None, None]
+        # per-(token, k) slot/keep at the *chosen* expert
+        keep_tk = jnp.take_along_axis(keep, gate_idx[..., None],
+                                      axis=-1)[..., 0]       # [G, Tg, K]
+        slot_tk = jnp.take_along_axis(slot, gate_idx[..., None],
+                                      axis=-1)[..., 0]       # [G, Tg, K]
+        xe = jnp.zeros((G, E, C, d), xg.dtype)
+        contrib = jnp.where(keep_tk[..., None],
+                            xg[:, :, None, :].astype(xg.dtype), 0)
+        xe = xe.at[g_ar, gate_idx, slot_tk].add(contrib)     # [G, E, C, d]
+        xe = shard_act(xe, batch_axes(), "model", None, None)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wi"])) * \
+            jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+        ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+        ye = shard_act(ye, batch_axes(), "model", None, None)
+        yg = ye[g_ar, gate_idx, slot_tk]                     # [G, Tg, K, d]
+        w = (gate_vals * keep_tk.astype(jnp.float32))[..., None]
+        y = (yg.astype(jnp.float32) * w).sum(2)
+    else:
+        xe = jnp.einsum("gtd,gtec->gecd", xg.astype(jnp.float32),
+                        dispatch).astype(xg.dtype)           # [G, E, C, d]
+        xe = shard_act(xe, batch_axes(), "model", None, None)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wi"])) * \
+            jnp.einsum("gecd,edf->gecf", xe, p["wg"])
+        ye = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+        ye = shard_act(ye, batch_axes(), "model", None, None)
+        y = jnp.einsum("gecd,gtec->gtd", ye.astype(jnp.float32), combine)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(xg @ sh["wi"]) * (xg @ sh["wg"])
+        y = y + (hs @ sh["wo"]).astype(jnp.float32)
+    return y.astype(xg.dtype), aux

@@ -1,0 +1,177 @@
+"""Recurrent blocks: Mamba2 (SSD, for zamba2) and xLSTM (mLSTM/sLSTM).
+
+The recurrences are O(1)-state per token, which is what makes the
+``long_500k`` decode shape feasible for these families. Training uses a
+chunked ``lax.scan`` over the sequence (linear time, constant memory per
+chunk); decode carries the state explicitly.
+
+These are TPU-native formulations of the papers' CUDA kernels: the inner
+chunk update is a dense einsum (MXU-friendly) and the cross-chunk recurrence
+is a short scan — the standard hardware adaptation for SSDs (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------- mamba2 ----
+def mamba2_init(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_in = 2 * d
+    H = d_in // cfg.ssm_headdim
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [x, z, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dt),
+        "out_proj": dense_init(ks[1], d_in, d, dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dt),
+    }
+
+
+def _mamba2_scan(xh, Bm, Cm, dtv, A, h0):
+    """Sequential SSD recurrence.
+    xh: [B,S,H,P]; Bm/Cm: [B,S,N]; dtv: [B,S,H]; h0: [B,H,N,P]."""
+    dt_ = jax.nn.softplus(dtv)                            # [B,S,H]
+    decay = jnp.exp(-jnp.exp(A)[None, None, :] * dt_)     # [B,S,H]
+
+    def step(h, t):
+        x_t, b_t, c_t, dc = t                 # [B,H,P],[B,N],[B,N],[B,H,1,1]
+        h = h * dc + jnp.einsum("bn,bhp->bhnp", b_t, x_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y
+
+    xs = (xh.transpose(1, 0, 2, 3), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), decay.transpose(1, 0, 2)[..., None, None])
+    h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys.transpose(1, 0, 2, 3)           # [B,S,H,P]
+
+
+def mamba2_fwd(p: Dict, cfg: ModelConfig, x: jax.Array,
+               state: Optional[jax.Array] = None,
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,d] -> (y, final_state[B,H,N,P])."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    P = cfg.ssm_headdim
+    H = d_in // P
+    N = cfg.ssm_state
+    z, xr, Bm, Cm, dtv = jnp.split(
+        x @ p["in_proj"], [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N],
+        axis=-1)
+    xh = xr.reshape(B, S, H, P).astype(jnp.float32)
+    dtv = dtv.astype(jnp.float32) + p["dt_bias"]
+    if state is None:
+        state = jnp.zeros((B, H, N, P), jnp.float32)
+    state, y = _mamba2_scan(xh, Bm.astype(jnp.float32),
+                            Cm.astype(jnp.float32), dtv, p["A_log"], state)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], state
+
+
+# ----------------------------------------------------------------- xlstm ----
+def mlstm_init(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "wi": dense_init(ks[3], d, cfg.n_heads, dt),   # input gate
+        "wf": dense_init(ks[4], d, cfg.n_heads, dt),   # forget gate
+        "wo": dense_init(ks[5], d, d, dt),
+        "norm": rmsnorm_init(d, dt),
+    }
+
+
+def mlstm_fwd(p: Dict, cfg: ModelConfig, x: jax.Array,
+              state: Optional[Tuple] = None) -> Tuple[jax.Array, Tuple]:
+    """Matrix-memory LSTM. state = (C [B,H,dh,dh], n [B,H,dh])."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, dh).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(B, S, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    v = (x @ p["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    ig = jnp.exp(-jax.nn.softplus(-(x @ p["wi"]))).astype(jnp.float32)
+    fg = jax.nn.sigmoid((x @ p["wf"]).astype(jnp.float32))
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+    else:
+        C0, n0 = state
+
+    def step(carry, t):
+        C, n = carry
+        q_t, k_t, v_t, i_t, f_t = t
+        f_ = f_t[..., None, None]
+        C = f_ * C + i_t[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        n = f_t[..., None] * n + i_t[..., None] * k_t
+        num = jnp.einsum("bhd,bhde->bhe", q_t, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q_t, n)), 1.0)
+        return (C, n), num / den[..., None]
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), ig.reshape(B, S, H).transpose(1, 0, 2),
+          fg.reshape(B, S, H).transpose(1, 0, 2))
+    (C, n), ys = jax.lax.scan(step, (C0, n0), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["wo"], (C, n)
+
+
+def slstm_init(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "wz": dense_init(ks[0], d, d, dt),
+        "wi": dense_init(ks[1], d, d, dt),
+        "wf": dense_init(ks[2], d, d, dt),
+        "wo": dense_init(ks[3], d, d, dt),
+        "proj": dense_init(ks[4], d, d, dt),
+        "norm": rmsnorm_init(d, dt),
+    }
+
+
+def slstm_fwd(p: Dict, cfg: ModelConfig, x: jax.Array,
+              state: Optional[Tuple] = None) -> Tuple[jax.Array, Tuple]:
+    """Scalar-memory LSTM. state = (c [B,d], n [B,d])."""
+    B, S, d = x.shape
+    z = jnp.tanh((x @ p["wz"]).astype(jnp.float32))
+    ig = jnp.exp(-jax.nn.softplus(-(x @ p["wi"]).astype(jnp.float32)))
+    fg = jax.nn.sigmoid((x @ p["wf"]).astype(jnp.float32))
+    og = jax.nn.sigmoid((x @ p["wo"]).astype(jnp.float32))
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+    else:
+        c0, n0 = state
+
+    def step(carry, t):
+        c, n = carry
+        z_t, i_t, f_t, o_t = t
+        c = f_t * c + i_t * z_t
+        n = f_t * n + i_t
+        return (c, n), o_t * c / jnp.maximum(n, 1.0)
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (z, ig, fg, og))
+    (c, n), ys = jax.lax.scan(step, (c0, n0), xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["proj"], (c, n)

@@ -1,0 +1,444 @@
+"""Model stacks: decoder-only, hybrid (zamba2), xLSTM, encoder-decoder.
+
+Layers are *stacked* ([L, ...] leading axis) and applied with
+``jax.lax.scan`` + selective remat — essential to keep HLO size and compile
+time bounded for 80-layer configs lowered against 512 devices. Heterogeneous
+stacks (zamba2's shared attention block, xLSTM's sLSTM cadence) use a
+super-layer: scan over groups, unrolling the small static pattern inside.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import batch_axes, shard_act
+from .config import ModelConfig
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------- helpers ----
+# When True, layer scans are fully unrolled. Used by the dry-run calibration:
+# XLA's cost analysis counts while-loop bodies once, so per-layer costs are
+# measured on small unrolled configs and extrapolated (launch/dryrun.py).
+_UNROLL = False
+
+
+def set_unroll(on: bool) -> None:
+    global _UNROLL
+    _UNROLL = on
+
+
+def scan_layers(f, init, xs, length=None):
+    if _UNROLL:
+        return jax.lax.scan(f, init, xs, length=length, unroll=True)
+    return jax.lax.scan(f, init, xs, length=length)
+
+
+def _stack_init(key, n: int, init_fn):
+    ks = jax.random.split(key, n)
+    return jax.vmap(init_fn)(ks)
+
+
+def _remat(f):
+    import os
+    if os.environ.get("REPRO_REMAT") == "min":
+        # §Perf hillclimb: save nothing across the layer boundary --
+        # backward recomputes the layer (more FLOPs, far fewer saved bytes)
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(f, policy=jax.checkpoint_policies.dots_saveable)
+
+
+# ------------------------------------------------------- decoder-only ------
+def dense_block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "attn": L.attention_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+    if cfg.is_moe:
+        p["moe"] = MOE.moe_init(k2, cfg)
+    elif cfg.d_ff:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def dense_block_fwd(cfg: ModelConfig, p: Params, x, pos,
+                    cache: Optional[Tuple] = None):
+    """Returns (x, new_cache, aux)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cache is None:
+        a = L.attention_fwd(p["attn"], cfg, h, pos)
+        new_cache = None
+    else:
+        a, ck, cv = L.attention_decode(p["attn"], cfg, h, cache[0], cache[1],
+                                       pos)
+        new_cache = (ck, cv)
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        m, aux = MOE.moe_fwd(p["moe"], cfg, h)
+    elif cfg.d_ff:
+        m = L.mlp_fwd(p["mlp"], cfg, h)
+    else:
+        m = jnp.zeros_like(h)
+    x = x + m
+    return shard_act(x, batch_axes(), None, None), new_cache, aux
+
+
+def decoder_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": L.embed_init(k1, cfg),
+        "layers": _stack_init(k2, cfg.n_layers,
+                              lambda k: dense_block_init(k, cfg)),
+        "lnf": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+
+
+def decoder_fwd(cfg: ModelConfig, params: Params, x, pos,
+                caches: Optional[Tuple] = None):
+    """Scan over stacked layers. caches: (k [L,B,T,Hk,dh], v) or None."""
+    def body(carry, xs):
+        h, aux = carry
+        if caches is None:
+            p = xs
+            h, _, a = dense_block_fwd(cfg, p, h, pos)
+            return (h, aux + a), None
+        p, ck, cv = xs
+        h, (ck, cv), a = dense_block_fwd(cfg, p, h, pos, (ck, cv))
+        return (h, aux + a), (ck, cv)
+
+    xs = params["layers"] if caches is None else \
+        (params["layers"], caches[0], caches[1])
+    (x, aux), new_caches = scan_layers(_remat(body),
+                                        (x, jnp.zeros((), jnp.float32)), xs)
+    x = L.rmsnorm(params["lnf"], x, cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def _ring(kv: jax.Array, S: int, Tw: int) -> jax.Array:
+    """Place the last Tw rows of a length-S prompt into ring-buffer slots
+    (slot j holds the token with position ≡ j mod Tw)."""
+    tail = kv[:, -Tw:]
+    return jnp.roll(tail, S % Tw, axis=1)
+
+
+def decoder_prefill(cfg: ModelConfig, params: Params, x, pos, Tw: int):
+    """Forward the prompt once, capturing per-layer K/V ring caches."""
+    S = x.shape[1]
+
+    def body(carry, p):
+        h, aux = carry
+        hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L._qkv(p["attn"], cfg, hn, pos)
+        mask = L.causal_mask(S, S, cfg.swa_window)
+        a = L._sdpa(q, k, v, mask, cfg) @ p["attn"]["wo"]
+        h = h + a
+        hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            m, a2 = MOE.moe_fwd(p["moe"], cfg, hn)
+            aux = aux + a2
+        elif cfg.d_ff:
+            m = L.mlp_fwd(p["mlp"], cfg, hn)
+        else:
+            m = jnp.zeros_like(hn)
+        h = shard_act(h + m, batch_axes(), None, None)
+        return (h, aux), (_ring(k, S, Tw), _ring(v, S, Tw))
+
+    (x, aux), (ks, vs) = scan_layers(
+        _remat(body), (x, jnp.zeros((), jnp.float32)), params["layers"])
+    return L.rmsnorm(params["lnf"], x, cfg.norm_eps), ks, vs, aux
+
+
+def encdec_prefill(cfg: ModelConfig, params: Params, x, pos, enc_out,
+                   Tw: int):
+    S = x.shape[1]
+
+    def body(h, p):
+        hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        q, k, v = L._qkv(p["attn"], cfg, hn, pos)
+        mask = L.causal_mask(S, S, None)
+        h = h + L._sdpa(q, k, v, mask, cfg) @ p["attn"]["wo"]
+        hn = L.rmsnorm(p["lnx"], h, cfg.norm_eps)
+        h = h + L.cross_attention_fwd(p["cross"], cfg, hn, enc_out)
+        hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        h = shard_act(h + L.mlp_fwd(p["mlp"], cfg, hn), batch_axes(),
+                      None, None)
+        return h, (_ring(k, S, Tw), _ring(v, S, Tw))
+
+    x, (ks, vs) = scan_layers(_remat(body), x, params["dec_layers"])
+    return L.rmsnorm(params["lnf"], x, cfg.norm_eps), ks, vs
+
+
+# ----------------------------------------------------------- zamba2 --------
+def zamba2_init(key, cfg: ModelConfig) -> Params:
+    inner = cfg.attn_every
+    n_super = cfg.n_layers // inner
+    tail = cfg.n_layers - n_super * inner
+    ks = jax.random.split(key, 5)
+
+    def group_init(k):
+        kk = jax.random.split(k, inner)
+        return jax.vmap(lambda kx: _mamba_layer_init(kx, cfg))(kk)
+
+    p = {
+        "embed": L.embed_init(ks[0], cfg),
+        "super": _stack_init(ks[1], n_super, group_init),
+        "shared_ln": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "shared_attn": L.attention_init(ks[2], cfg),
+        "lnf": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+    if tail:
+        p["tail"] = _stack_init(ks[3], tail,
+                                lambda k: _mamba_layer_init(k, cfg))
+    return p
+
+
+def _mamba_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "mamba": SSM.mamba2_init(k1, cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "mlp": L.mlp_init(k2, cfg),
+    }
+
+
+def _mamba_layer_fwd(cfg, p, x, state):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    m, state = SSM.mamba2_fwd(p["mamba"], cfg, h, state)
+    x = x + m
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_fwd(p["mlp"], cfg, h)
+    return shard_act(x, batch_axes(), None, None), state
+
+
+ZAMBA_WINDOW = 4096  # shared-attention sliding window (long-context safety)
+
+
+def zamba2_fwd(cfg: ModelConfig, params: Params, x, pos,
+               state: Optional[Dict] = None, decode: bool = False,
+               capture_kv: int = 0):
+    """state: {"ssm": [n_super, inner, B,H,N,P], "tail_ssm": [...],
+    "ak"/"av": [n_super, B, T, Hkv, dh]} (attention cache, decode only)."""
+    inner = cfg.attn_every
+    n_super = cfg.n_layers // inner
+    B = x.shape[0]
+    d_in = 2 * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    if state is None:
+        state = {}
+    ssm0 = state.get("ssm")
+    aux = jnp.zeros((), jnp.float32)
+
+    def super_body(carry, xs):
+        h = carry
+        p, s_in, ak, av = xs
+        s_out = []
+        for i in range(inner):
+            pi = jax.tree.map(lambda a: a[i], p)
+            si = None if s_in is None else s_in[i]
+            h, so = _mamba_layer_fwd(cfg, pi, h, si)
+            s_out.append(so)
+        # shared attention block (weights shared across groups)
+        hn = L.rmsnorm(params["shared_ln"], h, cfg.norm_eps)
+        if not decode:
+            if capture_kv:
+                S = hn.shape[1]
+                q, k, v = L._qkv(params["shared_attn"], cfg, hn, pos)
+                mask = L.causal_mask(S, S, ZAMBA_WINDOW)
+                a = L._sdpa(q, k, v, mask, cfg) @ \
+                    params["shared_attn"]["wo"]
+                nak = _ring(k, S, capture_kv)
+                nav = _ring(v, S, capture_kv)
+            else:
+                a = L.attention_fwd(params["shared_attn"], cfg, hn, pos,
+                                    window=ZAMBA_WINDOW)
+                nak, nav = ak, av
+        else:
+            a, nak, nav = L.attention_decode(params["shared_attn"], cfg, hn,
+                                             ak, av, pos,
+                                             window=ZAMBA_WINDOW)
+        h = h + a
+        return h, (jnp.stack(s_out), nak, nav)
+
+    if decode:
+        ak, av = state["ak"], state["av"]
+    else:  # unused as inputs in the full-attention branch
+        Tw = max(capture_kv, 1)
+        ak = jnp.zeros((n_super, B, Tw, cfg.n_kv_heads, cfg.d_head), x.dtype)
+        av = jnp.zeros_like(ak)
+    if ssm0 is None:
+        ssm0 = jnp.zeros((n_super, inner, B, H, cfg.ssm_state,
+                          cfg.ssm_headdim), jnp.float32)
+    x, (ssm1, ak1, av1) = scan_layers(
+        _remat(super_body), x, (params["super"], ssm0, ak, av))
+
+    tail_states = []
+    if "tail" in params:
+        nt = params["tail"]["ln1"]["scale"].shape[0]
+        t0 = state.get("tail_ssm")
+        for i in range(nt):
+            pi = jax.tree.map(lambda a: a[i], params["tail"])
+            si = None if t0 is None else t0[i]
+            x, so = _mamba_layer_fwd(cfg, pi, x, si)
+            tail_states.append(so)
+    x = L.rmsnorm(params["lnf"], x, cfg.norm_eps)
+    new_state = {"ssm": ssm1, "ak": ak1, "av": av1}
+    if tail_states:
+        new_state["tail_ssm"] = jnp.stack(tail_states)
+    return x, new_state, aux
+
+
+# ------------------------------------------------------------ xlstm --------
+def xlstm_init(key, cfg: ModelConfig) -> Params:
+    inner = cfg.slstm_every - 1          # mLSTM layers per group
+    n_super = cfg.n_layers // cfg.slstm_every
+    ks = jax.random.split(key, 4)
+
+    def group_init(k):
+        k1, k2 = jax.random.split(k)
+        kk = jax.random.split(k1, inner)
+        return {
+            "m": jax.vmap(lambda kx: _xl_layer_init(kx, cfg, "m"))(kk),
+            "s": _xl_layer_init(k2, cfg, "s"),
+        }
+
+    return {
+        "embed": L.embed_init(ks[0], cfg),
+        "super": _stack_init(ks[1], n_super, group_init),
+        "lnf": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+
+
+def _xl_layer_init(key, cfg, kind):
+    p = {"ln": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype))}
+    p["core"] = SSM.mlstm_init(key, cfg) if kind == "m" else \
+        SSM.slstm_init(key, cfg)
+    return p
+
+
+def xlstm_fwd(cfg: ModelConfig, params: Params, x, pos,
+              state: Optional[Dict] = None):
+    inner = cfg.slstm_every - 1
+    n_super = cfg.n_layers // cfg.slstm_every
+    B = x.shape[0]
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    d = cfg.d_model
+    if state is None:
+        state = {
+            "mC": jnp.zeros((n_super, inner, B, H, dh, dh), jnp.float32),
+            "mn": jnp.zeros((n_super, inner, B, H, dh), jnp.float32),
+            "sc": jnp.zeros((n_super, B, d), jnp.float32),
+            "sn": jnp.ones((n_super, B, d), jnp.float32),
+        }
+
+    def super_body(h, xs):
+        p, mC, mn, sc, sn = xs
+        mCo, mno = [], []
+        for i in range(inner):
+            pi = jax.tree.map(lambda a: a[i], p["m"])
+            hn = L.rmsnorm(pi["ln"], h, cfg.norm_eps)
+            y, (C1, n1) = SSM.mlstm_fwd(pi["core"], cfg, hn, (mC[i], mn[i]))
+            h = h + y
+            mCo.append(C1); mno.append(n1)
+        hn = L.rmsnorm(p["s"]["ln"], h, cfg.norm_eps)
+        y, (sc1, sn1) = SSM.slstm_fwd(p["s"]["core"], cfg, hn, (sc, sn))
+        h = h + y
+        return h, (jnp.stack(mCo), jnp.stack(mno), sc1, sn1)
+
+    x, (mC, mn, sc, sn) = scan_layers(
+        _remat(super_body), x,
+        (params["super"], state["mC"], state["mn"], state["sc"],
+         state["sn"]))
+    x = L.rmsnorm(params["lnf"], x, cfg.norm_eps)
+    return x, {"mC": mC, "mn": mn, "sc": sc, "sn": sn}, \
+        jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------- encoder-decoder -----
+def encdec_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": L.attention_init(k1, cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": L.mlp_init(k2, cfg),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": L.attention_init(k1, cfg),
+            "lnx": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "cross": L.attention_init(k2, cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": L.mlp_init(k3, cfg),
+        }
+
+    return {
+        "embed": L.embed_init(ks[0], cfg),
+        "enc_layers": _stack_init(ks[1], cfg.n_enc_layers, enc_layer),
+        "enc_lnf": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+        "dec_layers": _stack_init(ks[2], cfg.n_layers, dec_layer),
+        "lnf": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+    }
+
+
+def encoder_fwd(cfg: ModelConfig, params: Params, frames: jax.Array):
+    """frames: [B, F, d] (stubbed conv frontend output)."""
+    def body(h, p):
+        hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        h = h + L.attention_fwd(p["attn"], cfg, hn, None, causal=False)
+        hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_fwd(p["mlp"], cfg, hn)
+        return shard_act(h, batch_axes(), None, None), None
+
+    x, _ = scan_layers(_remat(body), frames, params["enc_layers"])
+    return L.rmsnorm(params["enc_lnf"], x, cfg.norm_eps)
+
+
+def encdec_fwd(cfg: ModelConfig, params: Params, x, pos, enc_out,
+               caches: Optional[Tuple] = None):
+    def body(carry, xs):
+        h = carry
+        if caches is None:
+            p = xs
+            cache = None
+        else:
+            p, ck, cv = xs
+            cache = (ck, cv)
+        hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+        if cache is None:
+            a = L.attention_fwd(p["attn"], cfg, hn, pos)
+            nc = (jnp.zeros((0,)), jnp.zeros((0,)))
+        else:
+            a, ck, cv = L.attention_decode(p["attn"], cfg, hn, cache[0],
+                                           cache[1], pos)
+            nc = (ck, cv)
+        h = h + a
+        hn = L.rmsnorm(p["lnx"], h, cfg.norm_eps)
+        h = h + L.cross_attention_fwd(p["cross"], cfg, hn, enc_out)
+        hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        h = h + L.mlp_fwd(p["mlp"], cfg, hn)
+        h = shard_act(h, batch_axes(), None, None)
+        return h, (None if caches is None else nc)
+
+    xs = params["dec_layers"] if caches is None else \
+        (params["dec_layers"], caches[0], caches[1])
+    x, new_caches = scan_layers(_remat(body), x, xs)
+    return L.rmsnorm(params["lnf"], x, cfg.norm_eps), new_caches

@@ -1,0 +1,99 @@
+"""Elastic scaling + failure handling.
+
+Two mechanisms:
+
+1. **LM side** — checkpoints are mesh-agnostic (full logical arrays,
+   reassembled on restore). ``reshard`` places a restored tree onto a new
+   mesh's shardings, so a job that lost a pod restarts on (N-1) pods with
+   only a spec rebuild: the divisibility guard in ``distributed.sharding``
+   re-derives legal specs for the new topology.
+
+2. **RTL-sim side** — ``repartition_state`` migrates a Manticore machine
+   state between two *compilations* of the same circuit (different core
+   counts / meshes): architectural state is addressed by RTL register name
+   and memory name, not by core, so the new partitioning is free to place
+   it anywhere (the paper's static schedule is rebuilt by the compiler; the
+   state transfer is exact).
+
+Straggler mitigation is *structural* in both stacks: static balanced
+partitions (paper §6.1) and equal-shard pjit steps mean no dynamic work
+imbalance; the remaining source (slow host / failing chip) is handled by
+the heartbeat hook in ``runtime/health.py`` + checkpoint-restart.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from ..core.bsp import Machine, MachineState
+from ..core.compile import Program
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """device_put every leaf against new-mesh shardings."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+# ----------------------------------------------------------- RTL engine ----
+def extract_state(prog: Program, state: MachineState) -> Dict[str, int]:
+    """Architectural state by name: registers + memories + cycle count."""
+    regs = np.asarray(state.regs)
+    out: Dict[str, Any] = {"__regs__": {}, "__mems__": {},
+                           "__counters__": np.asarray(state.counters)[0:1]}
+    for name, words in prog.state_regs.items():
+        v = 0
+        for j, locs in enumerate(words):
+            c, r = locs[0]
+            v |= int(regs[c, r]) << (16 * j)
+        out["__regs__"][name] = v
+    # memories: read back from spads/gmem via the program's layout
+    spads = np.asarray(state.spads)
+    gmem = np.asarray(state.gmem)
+    for mname, (core, base, words, is_global) in prog.stats.get(
+            "mem_layout", {}).items():
+        if is_global:
+            out["__mems__"][mname] = gmem[base:base + words].copy()
+        else:
+            out["__mems__"][mname] = spads[core, base:base + words].copy()
+    return out
+
+
+def inject_state(prog: Program, machine: Machine,
+                 saved: Dict[str, Any]) -> MachineState:
+    """Build an initial MachineState for a *new* compilation carrying over
+    the architectural state captured by ``extract_state``."""
+    st = machine.init_state()
+    regs = np.asarray(st.regs).copy()
+    for name, value in saved["__regs__"].items():
+        words = prog.state_regs.get(name)
+        if not words:
+            continue
+        for j, locs in enumerate(words):
+            for (c, r) in locs:          # every duplicated copy
+                if c < regs.shape[0]:
+                    regs[c, r] = (value >> (16 * j)) & 0xFFFF
+    spads = np.asarray(st.spads).copy()
+    gmem = np.asarray(st.gmem).copy()
+    for mname, data in saved.get("__mems__", {}).items():
+        layout = prog.stats.get("mem_layout", {}).get(mname)
+        if layout is None:
+            continue
+        core, base, words, is_global = layout
+        if is_global:
+            gmem[base:base + len(data)] = data
+        elif core < spads.shape[0]:
+            spads[core, base:base + len(data)] = data
+    import jax.numpy as jnp
+    return MachineState(
+        regs=jnp.asarray(regs), spads=jnp.asarray(spads),
+        gmem=jnp.asarray(gmem), flags=st.flags,
+        cache_tags=st.cache_tags, counters=st.counters)
+
+
+def migrate(old_prog: Program, old_state: MachineState,
+            new_prog: Program, new_machine: Machine) -> MachineState:
+    """Elastic re-scale of a running RTL simulation: old grid -> new grid."""
+    return inject_state(new_prog, new_machine,
+                        extract_state(old_prog, old_state))

@@ -1,0 +1,5 @@
+import os
+
+# tests must see the real (single) CPU device — only launch/dryrun.py asks
+# for 512 fake devices
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

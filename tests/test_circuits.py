@@ -1,0 +1,124 @@
+"""Differential tests for the nine paper benchmarks: netlist oracle vs the
+numpy ISA sim vs the jnp lockstep engine vs the Pallas kernel path."""
+import numpy as np
+import pytest
+
+from repro.circuits import CIRCUITS, FINISH, build
+from repro.core.bsp import Machine
+from repro.core.compile import compile_circuit
+from repro.core.interpreter import NetlistSim
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+
+NAMES = sorted(CIRCUITS)
+HW = HardwareConfig(grid_width=5, grid_height=5)
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    out = {}
+    for nm in NAMES:
+        b = build(nm, "small")
+        out[nm] = (b, compile_circuit(b.circuit, HW))
+    return out
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_oracle_self_check(name, compiled):
+    b, _ = compiled[name]
+    sim = NetlistSim(b.circuit)
+    ncyc, log = sim.run(b.n_cycles + 10)
+    assert ncyc == b.n_cycles
+    assert log[-1].exceptions == [FINISH]
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_isasim_matches(name, compiled):
+    b, prog = compiled[name]
+    sim = IsaSim(prog)
+    ncyc = sim.run(b.n_cycles + 10)
+    assert ncyc == b.n_cycles
+    assert set(sim.exceptions().values()) == {FINISH}
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_jnp_engine_matches(name, compiled):
+    b, prog = compiled[name]
+    m = Machine(prog)
+    st = m.run(m.init_state(), b.n_cycles + 10)
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_pallas_engine_matches(name, compiled):
+    b, prog = compiled[name]
+    if prog.has_global:
+        pytest.skip("privileged off-chip programs use the jnp engine")
+    m = Machine(prog, backend="pallas", interpret=True)
+    st = m.run(m.init_state(), b.n_cycles + 10)
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+
+
+@pytest.mark.parametrize("name", ["mc", "rv32r"])
+def test_register_trace_matches_oracle(name, compiled):
+    """Cycle-by-cycle register equivalence on two benches."""
+    b, prog = compiled[name]
+    oracle = NetlistSim(b.circuit)
+    m = Machine(prog)
+    st = m.init_state()
+    regs = [n for n in prog.state_regs][:6]
+    for _ in range(10):
+        oracle.step()
+        st = m.run(st, 1)
+        for r in regs:
+            assert m.read_reg(st, r) == oracle.reg_value(r), r
+
+
+def test_lpt_vs_balanced_both_correct(compiled):
+    b, _ = compiled["mc"]
+    for strat in ("balanced", "lpt"):
+        prog = compile_circuit(b.circuit, HW, strategy=strat)
+        sim = IsaSim(prog)
+        assert sim.run(b.n_cycles + 10) == b.n_cycles
+
+
+def test_balanced_fewer_sends_than_lpt():
+    """Table 4 property: communication-aware merging reduces Sends."""
+    b = build("mc", "full")
+    hw = HardwareConfig(grid_width=15, grid_height=15)
+    pb = compile_circuit(b.circuit, hw, strategy="balanced")
+    pl = compile_circuit(b.circuit, hw, strategy="lpt")
+    assert pb.stats["sends"] <= pl.stats["sends"]
+
+
+def test_luts_reduce_instructions():
+    """Fig 10 property: custom functions reduce non-NOp instructions."""
+    b = build("bc", "small")
+    with_l = compile_circuit(b.circuit, HW, use_luts=True)
+    without = compile_circuit(b.circuit, HW, use_luts=False)
+    assert with_l.stats["instrs"] <= without.stats["instrs"]
+    assert with_l.stats["lut_instrs"] > 0
+
+
+def test_global_stall_counters():
+    """Fig 8 machinery: global memories hit the cache/stall model."""
+    from repro.core.netlist import Circuit
+    c = Circuit("gmem")
+    m = c.mem("big", 1 << 12, 16, is_global=True)
+    ctr = c.reg(16, init=0, name="ctr")
+    c.set_next(ctr, ctr + 1)
+    rd = c.mem_read(m, ctr)
+    acc = c.reg(16, init=0, name="acc")
+    c.set_next(acc, acc + rd)
+    c.mem_write(m, ctr, acc, c.const(1, 1))
+    c.finish_when(ctr.eq(64), eid=FINISH)
+    prog = compile_circuit(c, HW)
+    assert prog.has_global
+    mach = Machine(prog)
+    st = mach.run(mach.init_state(), 100)
+    perf = mach.perf(st)
+    assert perf["ghits"] + perf["gmisses"] > 0
+    assert perf["stall_cycles"] > 0
+    assert perf["machine_cycles"] > perf["vcycles"] * prog.vcpl

@@ -1,0 +1,173 @@
+"""Hypothesis property tests: the compiler preserves netlist semantics.
+
+Random circuits are generated over the full DSL op set; the invariant is
+that the *netlist oracle* (interpreter.NetlistSim), and the *compiled binary
+on the numpy ISA simulator* (core.isasim) agree on every register, every
+cycle — under both partitioning strategies, with and without LUT fusion, on
+several grid sizes.
+"""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+from hypothesis import given, settings, HealthCheck
+
+from repro.core.compile import compile_circuit
+from repro.core.interpreter import NetlistSim
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+from repro.core.netlist import Circuit
+
+
+@st.composite
+def random_circuit(draw):
+    """A random single-clock netlist with registers, logic and a memory."""
+    rnd = draw(st.randoms(use_true_random=False))
+    n_regs = draw(st.integers(2, 5))
+    widths = [draw(st.sampled_from([1, 4, 8, 16, 17, 24, 32, 48]))
+              for _ in range(n_regs)]
+    c = Circuit("rand")
+    regs = [c.reg(w, init=rnd.getrandbits(w), name=f"r{i}")
+            for i, w in enumerate(widths)]
+    pool = list(regs)
+
+    def pick(width=None):
+        cands = [s for s in pool if width is None or s.width == width]
+        if not cands:
+            s = rnd.choice(pool)
+            if width is None:
+                return s
+            if s.width > width:
+                return s[width - 1:0]
+            return s.zext(width)
+        return rnd.choice(cands)
+
+    n_ops = draw(st.integers(3, 18))
+    for _ in range(n_ops):
+        kind = rnd.choice(["and", "or", "xor", "not", "add", "sub", "mul",
+                           "mux", "eq", "ltu", "shl", "shr", "slice", "cat"])
+        a = pick()
+        if kind in ("and", "or", "xor", "add", "sub", "mul"):
+            b = pick(a.width)
+            s = {"and": a & b, "or": a | b, "xor": a ^ b, "add": a + b,
+                 "sub": a - b, "mul": a * b}[kind]
+        elif kind == "not":
+            s = ~a
+        elif kind == "mux":
+            sel = pick(1) if any(x.width == 1 for x in pool) else a.eq(a)
+            b = pick(a.width)
+            s = c.mux(sel if sel.width == 1 else sel[0], a, b)
+        elif kind == "eq":
+            s = a.eq(pick(a.width))
+        elif kind == "ltu":
+            s = a.ltu(pick(a.width))
+        elif kind == "shl":
+            s = a << rnd.randrange(0, a.width)
+        elif kind == "shr":
+            s = a >> rnd.randrange(0, a.width)
+        elif kind == "slice":
+            hi = rnd.randrange(0, a.width)
+            s = a[a.width - 1:hi] if hi < a.width else a
+        else:  # cat
+            b = pick()
+            if a.width + b.width <= 64:
+                s = a.cat(b)
+            else:
+                s = a
+        pool.append(s)
+
+    # drive register next-values from the pool (width-adapted)
+    for r in regs:
+        s = pick()
+        s = s.trunc(r.width) if s.width >= r.width else s.zext(r.width)
+        c.set_next(r, s)
+
+    def fit16(s):
+        return s.trunc(16) if s.width >= 16 else s.zext(16)
+
+    # a small memory exercised by one reader/writer
+    use_mem = draw(st.booleans())
+    if use_mem:
+        m = c.mem("m0", 8, 16, init=[rnd.getrandbits(16) for _ in range(8)])
+        addr = fit16(pick())
+        c.mem_write(m, addr, fit16(pick()), c.const(1, 1))
+        rd = c.mem_read(m, addr)
+        extra = c.reg(16, init=0, name="rm")
+        c.set_next(extra, rd)
+    return c
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(random_circuit(),
+       st.sampled_from([(2, 2), (3, 3), (5, 5)]),
+       st.sampled_from(["balanced", "lpt"]),
+       st.booleans())
+def test_compiled_program_matches_oracle(circuit, grid, strategy, use_luts):
+    hw = HardwareConfig(grid_width=grid[0], grid_height=grid[1])
+    prog = compile_circuit(circuit, hw, strategy=strategy, use_luts=use_luts)
+    oracle = NetlistSim(circuit)
+    sim = IsaSim(prog)
+    for cyc in range(6):
+        oracle.step()
+        sim.step()
+        for name in circuit.reg_names.values():
+            if name in prog.state_regs:
+                assert sim.read_reg(name) == oracle.reg_value(name), (
+                    f"cycle {cyc}, reg {name}, strategy={strategy}, "
+                    f"luts={use_luts}")
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_circuit())
+def test_partition_invariants(circuit):
+    """Structural invariants of the split/merge pass."""
+    from repro.core.lower import lower
+    from repro.core.partition import partition
+
+    low = lower(circuit)
+    part = partition(low, num_cores=9)
+    assert part.num_procs <= 9
+    # privileged instructions only in the privileged process
+    for pi, proc in enumerate(part.procs):
+        for idx in proc:
+            if low.instrs[idx].is_privileged():
+                assert pi == part.priv_proc
+    # memories owned by exactly one process
+    owners = {}
+    for pi, mems in enumerate(part.proc_mems):
+        for m in mems:
+            assert m not in owners
+            owners[m] = pi
+    # every instruction of the monolithic program with a live sink is covered
+    covered = {i for proc in part.procs for i in proc}
+    # (dead code may be dropped, but every EXPECT/ST must be present)
+    from repro.core.isa import Op
+    for i, ins in enumerate(low.instrs):
+        if ins.op in (Op.EXPECT, Op.ST, Op.GST):
+            assert i in covered
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_circuit())
+def test_schedule_hazard_invariants(circuit):
+    """RAW hazards respected: def->use distance >= raw_latency per core."""
+    hw = HardwareConfig(grid_width=3, grid_height=3, raw_latency=4)
+    prog = compile_circuit(circuit, hw)
+    from repro.core.isa import Op
+    for c in range(prog.used_cores):
+        last_def = {}
+        for t in range(prog.t_compute):
+            op, dst, s1, s2, s3, s4, imm = prog.code[c, t]
+            if op == 0:
+                continue
+            for s in (s1, s2, s3, s4):
+                if s in last_def:
+                    assert t - last_def[s] >= hw.raw_latency, \
+                        f"core {c} slot {t} reads r{s} too early"
+            writes = Op(op) not in (Op.NOP, Op.ST, Op.GST, Op.EXPECT,
+                                    Op.SEND)
+            if writes and dst != 0:
+                last_def[dst] = t

@@ -1,0 +1,134 @@
+"""Multi-device execution tests (not just lowering): run in a subprocess
+with 8 host devices so the main test process keeps its single-device view.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_subprocess(body: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+def test_grid_machine_8dev_matches_oracle():
+    out = run_subprocess("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.circuits import build, FINISH
+        from repro.core.interpreter import NetlistSim
+        from repro.core.isa import HardwareConfig
+        from repro.core.compile import compile_circuit
+        from repro.core.grid import GridMachine
+
+        b = build("rv32r", "small")
+        sim = NetlistSim(b.circuit)
+        sim.run(b.n_cycles + 10)
+        prog = compile_circuit(b.circuit,
+                               HardwareConfig(grid_width=4, grid_height=4))
+        mesh = Mesh(np.array(jax.devices()), ("cores",))
+        gm = GridMachine(prog, mesh)
+        st = gm.run(gm.init_state(), b.n_cycles + 10)
+        assert gm.perf(st)["vcycles"] == b.n_cycles, gm.perf(st)
+        assert set(gm.exceptions(st).values()) == {FINISH}
+        for name in prog.state_regs:
+            assert gm.read_reg(st, name) == sim.reg_value(name), name
+        print("GRID8-OK")
+    """)
+    assert "GRID8-OK" in out
+
+
+def test_sharded_train_step_executes():
+    """A real sharded train step (mesh 4x2, TP=2) runs end-to-end and the
+    loss decreases — collectives execute, not just lower."""
+    out = run_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import SMOKE
+        from repro.launch.steps import make_train_step
+        from repro.distributed import sharding as SH
+        from repro.data.pipeline import PipelineConfig, TokenPipeline
+        from repro.optim import adamw
+        from jax.sharding import NamedSharding
+
+        cfg = SMOKE["qwen3-0.6b"]
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        model, step, p_shapes, p_specs, opt_shapes, o_specs = \\
+            make_train_step(cfg, mesh)
+        params = model.init(jax.random.key(0))
+        params = jax.device_put(params, SH.to_named(mesh, p_specs))
+        opt = adamw.init(params)
+        opt = jax.device_put(opt, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), o_specs,
+            is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec)))
+        pipe = TokenPipeline(PipelineConfig(cfg.vocab, 32, 8))
+        jstep = jax.jit(step, donate_argnums=(0, 1))
+        losses = []
+        for i in range(6):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+            params, opt, metrics = jstep(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        assert all(np.isfinite(losses)), losses
+        assert losses[-1] < losses[0], losses
+        print("TRAIN8-OK", losses[0], losses[-1])
+    """)
+    assert "TRAIN8-OK" in out
+
+
+def test_sharded_decode_executes():
+    out = run_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import SMOKE
+        from repro.launch.steps import make_serve_steps
+        from repro.distributed import sharding as SH
+
+        cfg = SMOKE["mixtral-8x7b"]
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        model, prefill, decode, p_shapes, p_specs = \\
+            make_serve_steps(cfg, mesh)
+        params = model.init(jax.random.key(0))
+        params = jax.device_put(params, SH.to_named(mesh, p_specs))
+        B, S = 4, 16
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+        cache = model.make_cache(B, 64)
+        cache = jax.device_put(cache, SH.to_named(
+            mesh, SH.cache_specs(cfg, mesh, jax.eval_shape(lambda: cache))))
+        logits, cache = jax.jit(prefill)(params, batch, cache)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        for i in range(4):
+            tok, cache = jax.jit(decode)(params, tok, cache, S + i)
+        assert tok.shape == (B, 1)
+        print("DECODE8-OK")
+    """)
+    assert "DECODE8-OK" in out
+
+
+def test_multipod_mesh_spec_resolution():
+    """pod axis resolves in specs; gradient sync spans pods (2x2x2 mesh)."""
+    out = run_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import SMOKE
+        from repro.launch.steps import lower_train
+
+        cfg = SMOKE["qwen3-1.7b"]
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        lowered, model = lower_train(cfg, mesh, seq_len=32, global_batch=8)
+        compiled = lowered.compile()
+        txt = compiled.as_text()
+        assert "all-reduce" in txt or "reduce-scatter" in txt
+        print("MULTIPOD-OK")
+    """)
+    assert "MULTIPOD-OK" in out
