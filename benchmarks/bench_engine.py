@@ -1,0 +1,119 @@
+"""Engine throughput: simulated Vcycles/second per circuit and backend.
+
+First entry in the repo's perf trajectory (PR 1): measures the partially-
+evaluated fast path (``Machine(specialize=True)`` — opcode-set-specialized
+slots, compact SEND capture, chunked K-Vcycle dispatch) against the seed
+engine (``specialize=False`` — compute-all-select, full [T, C] trace,
+per-Vcycle while_loop), plus the Pallas chunk kernel in interpret mode and
+the vectorized numpy ISA simulator.
+
+Emits ``results/bench/BENCH_engine.json`` and a copy at the repo root
+(``BENCH_engine.json``) so the trajectory is easy to diff across PRs.
+
+  PYTHONPATH=src python -m benchmarks.bench_engine            # all circuits
+  PYTHONPATH=src python -m benchmarks.bench_engine bc mm      # a subset
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, row_csv
+from repro.circuits import CIRCUITS, build
+from repro.core.bsp import Machine
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+
+HW = HardwareConfig(grid_width=5, grid_height=5)
+REPS = 3
+
+
+def _rate_machine(m: Machine, n: int) -> float:
+    st = m.init_state()
+    st = m.run(st, n)                      # compile + warm
+    jax.block_until_ready(st.regs)
+    best = float("inf")
+    for _ in range(REPS):
+        st = m.init_state()
+        t0 = time.perf_counter()
+        st = m.run(st, n)
+        jax.block_until_ready(st.regs)
+        best = min(best, time.perf_counter() - t0)
+    return n / best
+
+
+def _rate_isasim(prog, n: int) -> float:
+    best = float("inf")
+    for _ in range(REPS):
+        sim = IsaSim(prog)
+        t0 = time.perf_counter()
+        sim.run(n)
+        best = min(best, time.perf_counter() - t0)
+    return n / best
+
+
+def run(names=None) -> None:
+    rows = []
+    for nm in sorted(CIRCUITS):
+        if names and nm not in names:
+            continue
+        b = build(nm, "full")
+        # LUT-free compile: the specialization headline the paper-style
+        # engines target (no 16-pattern loop anywhere in the schedule)
+        prog = compile_circuit(b.circuit, HW, use_luts=False)
+        # stay below the FINISH cycle; cap the cycle count so the slow seed
+        # arm keeps the whole sweep in seconds
+        n = min(max(8, b.n_cycles - 2), 128)
+
+        row = {
+            "circuit": nm,
+            "t_compute": prog.t_compute,
+            "used_cores": prog.used_cores,
+            "n_sends": prog.n_sends,
+            "n_ops": len(prog.op_set()),
+            "lut_free": True,
+            "vcycles": n,
+        }
+        new = Machine(prog)
+        row["jnp_vcycles_per_s"] = _rate_machine(new, n)
+        seed = Machine(prog, specialize=False)
+        row["seed_vcycles_per_s"] = _rate_machine(seed, n)
+        row["speedup_vs_seed"] = (row["jnp_vcycles_per_s"]
+                                  / row["seed_vcycles_per_s"])
+        row["isasim_vcycles_per_s"] = _rate_isasim(prog, n)
+        if not prog.has_global:
+            pal = Machine(prog, backend="pallas", interpret=True)
+            row["pallas_interpret_vcycles_per_s"] = _rate_machine(pal, n)
+        else:
+            row["pallas_interpret_vcycles_per_s"] = None
+
+        # bit-exactness of the fast path against the seed engine
+        st_new = new.run(new.init_state(), b.n_cycles + 10)
+        st_seed = seed.run(seed.init_state(), b.n_cycles + 10)
+        row["bit_exact_vs_seed"] = bool(
+            np.array_equal(np.asarray(st_new.regs), np.asarray(st_seed.regs))
+            and np.array_equal(np.asarray(st_new.spads),
+                               np.asarray(st_seed.spads))
+            and np.array_equal(np.asarray(st_new.flags),
+                               np.asarray(st_seed.flags)))
+
+        rows.append(row)
+        row_csv(f"engine/{nm}", 1e6 / row["jnp_vcycles_per_s"],
+                f"{row['speedup_vs_seed']:.2f}x_vs_seed")
+
+    emit("BENCH_engine", rows)
+    # root-level copy: the cross-PR perf trajectory marker
+    root = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
+    root.write_text(json.dumps(rows, indent=1))
+    best = max((r["speedup_vs_seed"] for r in rows), default=0.0)
+    print(f"# best jnp speedup vs seed engine: {best:.2f}x")
+
+
+if __name__ == "__main__":
+    run([a for a in sys.argv[1:] if not a.startswith("-")] or None)

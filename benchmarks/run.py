@@ -12,6 +12,7 @@ import sys
 import time
 
 MODULES = [
+    "bench_engine",       # engine Vcycles/sec trajectory (jnp/pallas/isasim)
     "table3_perf",        # Table 3: main performance comparison
     "fig7_scaling",       # Fig 7:  VCPL multicore scaling
     "fig8_global_stall",  # Fig 8:  FIFO/RAM global-stall microbenchmarks

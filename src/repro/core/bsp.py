@@ -6,24 +6,44 @@ execute their own instruction simultaneously (compute-all-select over the
 opcode — NOp lanes are masked), which is exactly the paper's lockstep
 guarantee expressed as SIMD. One Vcycle is:
 
-    lax.scan over ``t_compute`` slots  ->  BSP exchange (deferred register
+    lax.scan over the slot stream  ->  BSP exchange (deferred register
     updates from SENDs land at the Vcycle boundary)  ->  commit done.
 
-The per-slot "result" of every lane is traced; the exchange is a pure static
-gather/scatter over the trace — the paper's collision-free NoC schedule
-becomes indexed addressing (single-device) or an ``all_to_all`` under
-``shard_map`` (see ``core.grid``).
+The engine is **partially evaluated against the program's own static code
+stream** — the paper's thesis (everything about the schedule is known at
+compile time) applied to the simulator itself:
+
+  * ``make_slot_step`` emits only the opcode branches the program actually
+    contains (``Program.op_set()``): a LUT-free program never pays the
+    16-pattern loop, a program with no off-chip traffic skips the cache
+    model entirely;
+  * the per-slot trace is gone — SEND values are scattered through the
+    static ``Program.send_capture`` index table into a compact
+    ``[n_sends + 1]`` buffer (last entry sacrificial), so the Vcycle
+    exchange reads ``n_sends`` words instead of ``T*C``;
+  * slots execute in **pipeline windows** of ``hw.raw_latency``: the
+    scheduler guarantees a result is not readable for ``raw_latency``
+    slots (the hardware's 4-stage exec pipeline, §5.1), so reads and ALU
+    work for a whole window batch into one [W, C] tensor op — register
+    writes, stores and the cache model stay slot-ordered within the
+    window;
+  * Vcycles run in **chunks** of K under one ``lax.scan`` with per-Vcycle
+    freeze predication; the host checks exceptions once per chunk instead
+    of dispatching (and recompiling for) every ``num_cycles`` value.
 
 The privileged core's off-chip traffic (GLD/GST) is modeled with the paper's
 direct-mapped cache + global-stall cost model: stalls do not change
 simulation *results* (the whole machine freezes together), so the engine
 executes them inline and accumulates the stall cycles performance counters
 (§7.7 / Fig. 8).
+
+``Machine(..., specialize=False)`` keeps the seed behaviour (compute-all
+branches, full [T, C] trace, per-Vcycle ``while_loop``) as the baseline arm
+for ``benchmarks/bench_engine.py``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, FrozenSet, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +53,17 @@ from .compile import Program
 from .isa import Op
 
 U32 = jnp.uint32
-MASK = jnp.uint32(0xFFFF)
+
+# Vcycles per chunked dispatch: one XLA launch simulates up to K RTL cycles;
+# the host looks at the exception flags once per chunk.
+DEFAULT_CHUNK = 32
+
+# unrolling the window loop (full per-window specialization) is bounded by
+# slot count to keep trace/compile time sane on very deep schedules
+UNROLL_SLOTS = 4096
+
+# opcodes with no register result (SEND's value goes to the exchange only)
+_NO_WRITE_OPS = (Op.NOP, Op.ST, Op.GST, Op.EXPECT, Op.SEND)
 
 
 class MachineState(NamedTuple):
@@ -42,129 +72,219 @@ class MachineState(NamedTuple):
     gmem: jax.Array      # [G] uint32
     flags: jax.Array     # [C] uint32 — first exception id per core (0 = none)
     cache_tags: jax.Array  # [LINES] int32 (-1 = invalid)
-    counters: jax.Array  # [4] uint64: vcycles, ghits, gmisses, stall_cycles
+    counters: jax.Array  # [4] uint32: vcycles, ghits, gmisses, stall_cycles
 
 
-def _slot_step(luts, spad_words, gmem_words, cache_lines, line_words,
-               hit_stall, miss_stall, carry, instr):
-    """Execute one slot for all lanes. ``instr`` is [C, 7] int32."""
-    regs, spads, gmem, flags, tags, counters = carry
-    C = regs.shape[0]
-    ar = jnp.arange(C)
+def _alu_branches(ops, v1, v2, v3, v4, imm, lut_tt=None, ld_val=None,
+                  gld_val=None):
+    """(op, value) branch list for every result-producing opcode in ``ops``
+    — the single definition of the ALU semantics, shared by the scan/window
+    engines and the unrolled fast path. Operand shapes propagate ([C] or
+    [W, C]); ``lut_tt`` is the pre-gathered [..., 16] truth table,
+    ``ld_val``/``gld_val`` the pre-gathered memory reads (required iff
+    LUT/LD/GLD is in ``ops``)."""
+    branches = []
 
-    op = instr[:, 0]
-    dst = instr[:, 1]
-    imm = instr[:, 6].astype(U32)
-    v = [regs[ar, instr[:, k]] for k in range(2, 6)]
-    v1, v2, v3, v4 = v
+    def b(o, thunk):
+        if o in ops:
+            branches.append((o, thunk()))
 
-    # ---- arithmetic / logic (all elementwise over lanes) ----
-    add3 = v1 + v2 + v3
-    sub3 = v1 - v2 - v3
-    prod = v1 * v2
-    shamt = imm & 15
-    res_slice_off = imm >> 5
-    res_slice_msk = (U32(1) << (imm & 31)) - 1
+    b(Op.MOV, lambda: v1)
+    b(Op.MOVI, lambda: imm & 0xFFFF)
+    b(Op.ADD, lambda: (v1 + v2) & 0xFFFF)
+    b(Op.ADDC, lambda: (v1 + v2 + v3) & 0xFFFF)
+    b(Op.CARRY, lambda: ((v1 + v2 + v3) >> 16) & 0xFFFF)
+    b(Op.SUB, lambda: (v1 - v2) & 0xFFFF)
+    b(Op.SUBB, lambda: (v1 - v2 - v3) & 0xFFFF)
+    b(Op.BORROW, lambda: (v1 < v2 + v3).astype(U32))
+    b(Op.MUL, lambda: (v1 * v2) & 0xFFFF)
+    b(Op.MULH, lambda: ((v1 * v2) >> 16) & 0xFFFF)
+    b(Op.AND, lambda: v1 & v2)
+    b(Op.OR, lambda: v1 | v2)
+    b(Op.XOR, lambda: v1 ^ v2)
+    b(Op.NOT, lambda: (~v1) & 0xFFFF)
+    b(Op.MUX, lambda: jnp.where(v1 != 0, v2, v3))
+    b(Op.SEQ, lambda: (v1 == v2).astype(U32))
+    b(Op.SNE, lambda: (v1 != v2).astype(U32))
+    b(Op.SLTU, lambda: (v1 < v2).astype(U32))
+    b(Op.SLL, lambda: (v1 << (imm & 15)) & 0xFFFF)
+    b(Op.SRL, lambda: v1 >> (imm & 15))
+    b(Op.SRA, lambda: ((((v1 ^ 0x8000) - 0x8000).astype(jnp.int32)
+                        >> (imm & 15)).astype(U32)) & 0xFFFF)
+    b(Op.SLLV, lambda: (v1 << (v2 & 15)) & 0xFFFF)
+    b(Op.SRLV, lambda: v1 >> (v2 & 15))
+    b(Op.SLICE, lambda: (v1 >> (imm >> 5)) & ((1 << (imm & 31)) - 1))
 
-    sgn = ((v1 ^ 0x8000) - 0x8000).astype(jnp.int32)
-
-    # LUT: 16-pattern compute-all-select (per-bit-lane 4-input function)
-    tt = luts[ar, jnp.minimum(imm, luts.shape[1] - 1)]  # [C, 16] uint32
-    lut_out = jnp.zeros((C,), U32)
-    nv = [(~x) & MASK for x in v]
-    for p in range(16):
+    if Op.LUT in ops:
+        # LUT: 16-pattern compute-all-select (per-bit-lane 4-input fn);
         # pattern bit i corresponds to LUT input i (s1 -> bit 0)
-        m = (v1 if p & 1 else nv[0]) & (v2 if p & 2 else nv[1]) \
-            & (v3 if p & 4 else nv[2]) & (v4 if p & 8 else nv[3])
-        lut_out = lut_out | (m & tt[:, p])
+        lut_out = jnp.zeros_like(v1)
+        nv = [(~x) & 0xFFFF for x in (v1, v2, v3, v4)]
+        for p in range(16):
+            m = (v1 if p & 1 else nv[0]) & (v2 if p & 2 else nv[1]) \
+                & (v3 if p & 4 else nv[2]) & (v4 if p & 8 else nv[3])
+            lut_out = lut_out | (m & lut_tt[..., p])
+        branches.append((Op.LUT, lut_out))
+    if Op.LD in ops:
+        branches.append((Op.LD, ld_val))
+    if Op.GLD in ops:
+        branches.append((Op.GLD, gld_val))
+    b(Op.SEND, lambda: v1)
+    return branches
 
-    ld_addr = v1 % spad_words
-    ld_val = spads[ar, ld_addr]
-    g_addr = ((v1 << 16) | v2) % gmem_words
-    gld_val = gmem[g_addr]
 
-    branches = [
-        (Op.MOV, v1),
-        (Op.MOVI, imm & MASK),
-        (Op.ADD, (v1 + v2) & MASK),
-        (Op.ADDC, add3 & MASK),
-        (Op.CARRY, (add3 >> 16) & MASK),
-        (Op.SUB, (v1 - v2) & MASK),
-        (Op.SUBB, sub3 & MASK),
-        (Op.BORROW, (v1 < v2 + v3).astype(U32)),
-        (Op.MUL, prod & MASK),
-        (Op.MULH, (prod >> 16) & MASK),
-        (Op.AND, v1 & v2),
-        (Op.OR, v1 | v2),
-        (Op.XOR, v1 ^ v2),
-        (Op.NOT, (~v1) & MASK),
-        (Op.MUX, jnp.where(v1 != 0, v2, v3)),
-        (Op.SEQ, (v1 == v2).astype(U32)),
-        (Op.SNE, (v1 != v2).astype(U32)),
-        (Op.SLTU, (v1 < v2).astype(U32)),
-        (Op.SLL, (v1 << shamt) & MASK),
-        (Op.SRL, v1 >> shamt),
-        (Op.SRA, (sgn >> shamt).astype(U32) & MASK),
-        (Op.SLLV, (v1 << (v2 & 15)) & MASK),
-        (Op.SRLV, v1 >> (v2 & 15)),
-        (Op.SLICE, (v1 >> res_slice_off) & res_slice_msk),
-        (Op.LUT, lut_out),
-        (Op.LD, ld_val),
-        (Op.GLD, gld_val),
-        (Op.SEND, v1),
-    ]
-    result = jnp.zeros((C,), U32)
-    for code_op, val in branches:
-        result = jnp.where(op == int(code_op), val, result)
+def make_slot_step(luts, spad_words, gmem_words, cache_lines, line_words,
+                   hit_stall, miss_stall,
+                   op_set: Optional[FrozenSet[Op]] = None):
+    """Build the per-slot executor, specialized to ``op_set``.
 
-    # ---- register write (ops with a result; never r0) ----
-    no_write = ((op == int(Op.NOP)) | (op == int(Op.ST)) |
-                (op == int(Op.GST)) | (op == int(Op.EXPECT)) |
-                (op == int(Op.SEND)) | (dst == 0))
-    wdst = jnp.where(no_write, 0, dst)
-    wval = jnp.where(no_write, regs[ar, 0], result)
-    regs = regs.at[ar, wdst].set(wval)
+    The returned ``step(carry, xs)`` is a ``lax.scan`` body with
+    ``carry = (regs, spads, gmem, flags, tags, counters, sbuf)`` and
+    ``xs = (instr [C, 7] int32, cap [C] int32)`` where ``cap`` maps each
+    lane to its compact SEND-buffer slot (or the sacrificial last slot).
+    Only branches for opcodes in ``op_set`` are traced; ``op_set=None``
+    emits everything (the unspecialized compute-all form).
+    """
+    win = make_window_step(luts, spad_words, gmem_words, cache_lines,
+                           line_words, hit_stall, miss_stall,
+                           op_set=op_set, window=1)
 
-    # ---- scratchpad store (predicated) ----
-    st_mask = (op == int(Op.ST)) & (v3 != 0)
-    st_addr = v1 % spad_words
-    spads = spads.at[ar, st_addr].set(
-        jnp.where(st_mask, v2, spads[ar, st_addr]))
+    def step(carry, xs):
+        instr, cap = xs
+        return win(carry, (instr[None], cap[None]))
 
-    # ---- global store + cache/stall model (privileged lanes) ----
-    gst_mask = (op == int(Op.GST)) & (v4 != 0)
-    gmem = gmem.at[jnp.where(gst_mask, g_addr, 0)].set(
-        jnp.where(gst_mask, v3, gmem[jnp.where(gst_mask, g_addr, 0)]))
+    return step
 
-    g_access = (op == int(Op.GLD)) | gst_mask
-    any_g = jnp.any(g_access)
-    # model the (single) privileged access through the direct-mapped cache
-    lane = jnp.argmax(g_access)
-    line = (g_addr[lane] // line_words).astype(jnp.int32)
-    idx = line % cache_lines
-    hit = (tags[idx] == line) & any_g
-    miss = (~hit) & any_g
-    tags = tags.at[idx].set(jnp.where(any_g, line, tags[idx]))
-    counters = counters.at[1].add(hit.astype(jnp.uint64))
-    counters = counters.at[2].add(miss.astype(jnp.uint64))
-    counters = counters.at[3].add(
-        jnp.where(hit, jnp.uint64(hit_stall),
-                  jnp.where(miss, jnp.uint64(miss_stall), jnp.uint64(0))))
 
-    # ---- exceptions (EXPECT raises when operands differ) ----
-    exc = (op == int(Op.EXPECT)) & (v1 != v2)
-    flags = jnp.where((flags == 0) & exc, imm, flags)
+def make_window_step(luts, spad_words, gmem_words, cache_lines, line_words,
+                     hit_stall, miss_stall,
+                     op_set: Optional[FrozenSet[Op]] = None,
+                     window: int = 1):
+    """Build the pipeline-window executor, specialized to ``op_set``.
 
-    return (regs, spads, gmem, flags, tags, counters), result & MASK
+    Executes ``window`` consecutive slots per call: all register/memory
+    *reads* and the ALU run batched over a [W, C] tensor — sound because
+    the scheduler spaces every RAW def->use pair by ``hw.raw_latency``
+    slots (use ``window <= raw_latency``) and orders all loads of a memory
+    before its stores — while register writes, stores and the cache model
+    are applied slot-by-slot to preserve WAW/memory order.
+
+    ``step(carry, xs)`` with ``carry = (regs, spads, gmem, flags, tags,
+    counters, sbuf)`` and ``xs = (instr [W, C, 7], cap [W, C])``.
+    """
+    W = window
+    ops = frozenset(Op) if op_set is None else frozenset(op_set)
+    need_v3 = bool(ops & {Op.ADDC, Op.CARRY, Op.SUBB, Op.BORROW,
+                          Op.MUX, Op.ST, Op.GST, Op.LUT})
+    need_v4 = bool(ops & {Op.LUT, Op.GST})
+    has_global = bool(ops & {Op.GLD, Op.GST})
+    writes = bool(ops - set(_NO_WRITE_OPS))
+
+    def step(carry, xs):
+        regs, spads, gmem, flags, tags, counters, sbuf = carry
+        instr, cap = xs
+        C = regs.shape[0]
+        ar = jnp.arange(C)
+        col = jnp.broadcast_to(ar[None, :], (W, C))
+
+        op = instr[..., 0]
+        dst = instr[..., 1]
+        imm = instr[..., 6].astype(U32)
+        zero = jnp.zeros((W, C), U32)
+        v1 = regs[col, instr[..., 2]]
+        v2 = regs[col, instr[..., 3]]
+        v3 = regs[col, instr[..., 4]] if need_v3 else zero
+        v4 = regs[col, instr[..., 5]] if need_v4 else zero
+
+        lut_tt = (luts[col, jnp.minimum(imm, luts.shape[1] - 1)]
+                  if Op.LUT in ops else None)                 # [W, C, 16]
+        ld_val = spads[col, v1 % spad_words] if Op.LD in ops else None
+        if has_global:
+            g_addr = ((v1 << 16) | v2) % gmem_words
+        gld_val = gmem[g_addr] if Op.GLD in ops else None
+        branches = _alu_branches(ops, v1, v2, v3, v4, imm,
+                                 lut_tt, ld_val, gld_val)
+
+        result = zero
+        for code_op, val in branches:
+            result = jnp.where(op == int(code_op), val, result)
+
+        # ---- register writes (slot-ordered; never r0) ----
+        if writes:
+            no_write = dst == 0
+            for o in _NO_WRITE_OPS:
+                if o in ops:
+                    no_write = no_write | (op == int(o))
+            wdst = jnp.where(no_write, 0, dst)
+            for w in range(W):
+                wval = jnp.where(no_write[w], regs[ar, 0], result[w])
+                regs = regs.at[ar, wdst[w]].set(wval)
+
+        # ---- scratchpad stores (predicated, slot-ordered) ----
+        if Op.ST in ops:
+            st_mask = (op == int(Op.ST)) & (v3 != 0)
+            st_addr = v1 % spad_words
+            for w in range(W):
+                spads = spads.at[ar, st_addr[w]].set(
+                    jnp.where(st_mask[w], v2[w], spads[ar, st_addr[w]]))
+
+        # ---- global stores + cache/stall model (privileged lanes) ----
+        if has_global:
+            gst_mask = (op == int(Op.GST)) & (v4 != 0)
+            for w in range(W):
+                if Op.GST in ops:
+                    w_addr = jnp.where(gst_mask[w], g_addr[w], 0)
+                    gmem = gmem.at[w_addr].set(
+                        jnp.where(gst_mask[w], v3[w], gmem[w_addr]))
+                g_access = (op[w] == int(Op.GLD)) | gst_mask[w]
+                any_g = jnp.any(g_access)
+                # model the (single) privileged access through the cache
+                lane = jnp.argmax(g_access)
+                line = (g_addr[w, lane] // line_words).astype(jnp.int32)
+                idx = line % cache_lines
+                hit = (tags[idx] == line) & any_g
+                miss = (~hit) & any_g
+                tags = tags.at[idx].set(jnp.where(any_g, line, tags[idx]))
+                counters = counters.at[1].add(hit.astype(jnp.uint32))
+                counters = counters.at[2].add(miss.astype(jnp.uint32))
+                counters = counters.at[3].add(
+                    jnp.where(hit, jnp.uint32(hit_stall),
+                              jnp.where(miss, jnp.uint32(miss_stall),
+                                        jnp.uint32(0))))
+
+        # ---- exceptions (EXPECT raises when operands differ) ----
+        if Op.EXPECT in ops:
+            exc = (op == int(Op.EXPECT)) & (v1 != v2)     # [W, C]
+            any_exc = exc.any(axis=0)
+            first_w = jnp.argmax(exc, axis=0)             # earliest slot wins
+            imm_sel = imm[first_w, ar]
+            flags = jnp.where((flags == 0) & any_exc, imm_sel, flags)
+
+        # ---- compact SEND capture (non-senders hit the sacrificial slot) --
+        sbuf = sbuf.at[cap.reshape(-1)].set(
+            (result & 0xFFFF).reshape(-1))
+        return (regs, spads, gmem, flags, tags, counters, sbuf), None
+
+    return step
 
 
 class Machine:
-    """Executable instance of a compiled Program (single host/device)."""
+    """Executable instance of a compiled Program (single host/device).
+
+    ``specialize=True`` (default) runs the partially-evaluated fast path:
+    opcode-set-specialized pipeline-window step, compact SEND capture and
+    chunked K-Vcycle dispatch. ``specialize=False`` reproduces the seed
+    engine (full ISA select, [T, C] trace, per-Vcycle while_loop) and
+    exists so the perf trajectory can be measured against it.
+    """
 
     def __init__(self, program: Program, backend: str = "jnp",
-                 compact: bool = True, interpret: bool = True):
+                 compact: bool = True, interpret: bool = True,
+                 specialize: bool = True, chunk: int = DEFAULT_CHUNK):
         self.p = program
         self.backend = backend
+        self.specialize = specialize
+        self.chunk = max(1, int(chunk))
         hw = program.hw
         # active-core compaction: the FPGA burns idle cores for free, the
         # interpreter need not simulate them (beyond-paper optimization).
@@ -181,12 +301,108 @@ class Machine:
         self.xchg = tuple(jnp.asarray(a) for a in (
             program.xchg_src_slot, program.xchg_src_core,
             program.xchg_dst_core, program.xchg_dst_reg))
+        self.n_sends = program.n_sends
         self.cache_lines = hw.cache_words // hw.cache_line_words
-        self._run = jax.jit(self._run_impl, static_argnames=("num_cycles",))
+        self.op_set = program.op_set() if specialize else None
+        if not specialize:
+            # seed engine: unspecialized compute-all step + full trace
+            self._step = make_slot_step(
+                self.luts, max(self.spad0.shape[1], 1),
+                max(self.gmem0.shape[0], 1), self.cache_lines,
+                hw.cache_line_words, hw.cache_hit_stall,
+                hw.cache_miss_stall, op_set=None)
+
+        # pipeline-windowed code stream: [T/W, W, C, 7] with W = the
+        # hardware RAW latency (all-NOP padding rows; sacrificial capture).
+        # Only the specialized jnp paths consume it — the pallas backend
+        # builds its own padded capture table and the seed path scans the
+        # raw code.
+        T = self.code.shape[0]
+        W = max(1, int(hw.raw_latency))
+        Tp = ((T + W - 1) // W) * W
+        self.W = W
+        if specialize and backend != "pallas":
+            code_p = np.zeros((Tp, C, 7), np.int32)
+            code_p[:T] = np.asarray(self.code)
+            cap_p = np.full((Tp, C), self.n_sends, np.int32)
+            cap_p[:T] = program.send_capture(C)
+
+        # static per-window metadata for the fully-unrolled fast path:
+        # (instr, ops, write/store/send/expect/global sites — all constant)
+        self._unrolled = (specialize and backend != "pallas"
+                          and T <= UNROLL_SLOTS)
+        if specialize and backend != "pallas" and not self._unrolled:
+            # deep-schedule fallback: scan over specialized windows
+            self.wcode = jnp.asarray(code_p.reshape(Tp // W, W, C, 7))
+            self.wcap = jnp.asarray(cap_p.reshape(Tp // W, W, C))
+            self._wstep = make_window_step(
+                self.luts, max(self.spad0.shape[1], 1),
+                max(self.gmem0.shape[0], 1), self.cache_lines,
+                hw.cache_line_words, hw.cache_hit_stall,
+                hw.cache_miss_stall, op_set=self.op_set, window=W)
+        self._windows = []
+        if self._unrolled:
+            no_write_ops = {int(o) for o in _NO_WRITE_OPS}
+            for iw in range(Tp // W):
+                instr = code_p[iw * W:(iw + 1) * W]          # [W, C, 7]
+                wcapn = cap_p[iw * W:(iw + 1) * W]           # [W, C]
+                opw = instr[..., 0]
+                if not opw.any():
+                    continue                                 # all-NOP window
+                wops = frozenset(Op(int(o)) for o in np.unique(opw) if o)
+                wr_rows, st_rows, send_rows, exp_rows, glb_rows = \
+                    [], [], [], [], []
+                for w in range(W):
+                    row = instr[w]
+                    opr = row[:, 0]
+                    wr = np.nonzero((row[:, 1] != 0) &
+                                    ~np.isin(opr, list(no_write_ops)))[0]
+                    if wr.size:
+                        wr_rows.append((w, wr, row[wr, 1]))
+                    st = np.nonzero(opr == int(Op.ST))[0]
+                    if st.size:
+                        st_rows.append((w, st))
+                    sn = np.nonzero(opr == int(Op.SEND))[0]
+                    if sn.size:
+                        send_rows.append((w, sn, wcapn[w, sn]))
+                    ex = np.nonzero(opr == int(Op.EXPECT))[0]
+                    if ex.size:
+                        exp_rows.append((w, ex))
+                    for gop, is_gst in ((Op.GLD, False), (Op.GST, True)):
+                        gl = np.nonzero(opr == int(gop))[0]
+                        if gl.size:
+                            glb_rows.append((w, gl, is_gst))
+                # merge the window's register writes into one scatter when
+                # no (core, reg) cell is written twice (WAW inside a RAW
+                # window can only come from dead writes — regalloc never
+                # emits them, but stay exact if it ever does)
+                if len(wr_rows) > 1:
+                    wss = np.concatenate([np.full(c.shape, w, np.int32)
+                                          for (w, c, _) in wr_rows])
+                    css = np.concatenate([c for (_, c, _) in wr_rows])
+                    dss = np.concatenate([d for (_, _, d) in wr_rows])
+                    cells = css.astype(np.int64) * hw.num_regs + dss
+                    if np.unique(cells).size == cells.size:
+                        wr_rows = [(wss, css, dss)]
+                self._windows.append((instr, wops, wr_rows, st_rows,
+                                      send_rows, exp_rows, glb_rows))
+
         if backend == "pallas":
             from ..kernels import ops as kops
-            self._vcycle_kernel = kops.make_vcycle(
-                program, C, interpret=interpret)
+            if specialize:
+                self._chunk_kernel = kops.make_vcycle_chunk(
+                    program, C, self.chunk, interpret=interpret)
+            else:
+                self._vcycle_kernel = kops.make_vcycle(
+                    program, C, interpret=interpret)
+        if specialize:
+            if backend == "pallas":
+                self._run_chunk = jax.jit(self._chunk_kernel)
+            else:
+                self._run_chunk = jax.jit(self._chunk_impl)
+        else:
+            self._run = jax.jit(self._run_legacy,
+                                static_argnames=("num_cycles",))
 
     # ------------------------------------------------------------------
     def init_state(self) -> MachineState:
@@ -196,37 +412,171 @@ class Machine:
             gmem=self.gmem0,
             flags=jnp.zeros((self.C,), U32),
             cache_tags=-jnp.ones((self.cache_lines,), jnp.int32),
-            counters=jnp.zeros((4,), jnp.uint64),
+            counters=jnp.zeros((4,), jnp.uint32),
         )
 
+    # ------------------------------------------------ specialized path ----
     def _vcycle(self, carry):
+        if self._unrolled:
+            return self._vcycle_unrolled(carry)
+        regs, spads, gmem, flags, tags, counters = carry
+        sbuf = jnp.zeros((self.n_sends + 1,), U32)
+        (regs, spads, gmem, flags, tags, counters, sbuf), _ = jax.lax.scan(
+            self._wstep, (regs, spads, gmem, flags, tags, counters, sbuf),
+            (self.wcode, self.wcap), unroll=2)
+        # ---- BSP exchange straight from the compact SEND buffer ----
+        if self.n_sends:
+            _, _, d_core, d_reg = self.xchg
+            regs = regs.at[d_core, d_reg].set(sbuf[:self.n_sends])
+        counters = counters.at[0].add(jnp.uint32(1))
+        return (regs, spads, gmem, flags, tags, counters)
+
+    def _vcycle_unrolled(self, carry):
+        """Fully partially-evaluated Vcycle: the window loop is unrolled
+        over the static code stream. Every window traces only the branches
+        for *its own* opcodes (the per-slot usage metadata), every
+        gather/scatter site (writes, stores, SENDs, EXPECTs, global ops) is
+        emitted only where the schedule actually contains one — with
+        constant index arrays — and all SEND values merge into a single
+        exchange scatter. The XLA graph *is* the program."""
+        regs, spads, gmem, flags, tags, counters = carry
         hw = self.p.hw
-        step = functools.partial(
-            _slot_step, self.luts,
-            max(self.spad0.shape[1], 1), max(self.gmem0.shape[0], 1),
-            self.cache_lines, hw.cache_line_words,
-            hw.cache_hit_stall, hw.cache_miss_stall)
+        S = max(self.spad0.shape[1], 1)
+        G = max(self.gmem0.shape[0], 1)
+        send_idx, send_parts = [], []
+
+        for wi in self._windows:
+            (instr, wops, wr_rows, st_rows, send_rows, exp_rows,
+             glb_rows) = wi
+            W = instr.shape[0]
+            col = np.broadcast_to(np.arange(self.C)[None, :],
+                                  (W, self.C))
+            imm = instr[..., 6].astype(np.uint32)
+            op = instr[..., 0]
+            # ST/GST operands must also come from the window-start batch:
+            # a WAR/ORDER edge lets another instruction overwrite a store's
+            # predicate register as little as 1 slot after the store reads
+            # it, and the register writes above are applied before the
+            # store sites below
+            need_v3 = bool(wops & {Op.ADDC, Op.CARRY, Op.SUBB, Op.BORROW,
+                                   Op.MUX, Op.LUT, Op.ST, Op.GST})
+            need_v4 = bool(wops & {Op.LUT, Op.GST})
+            v1 = regs[col, instr[..., 2]]
+            v2 = regs[col, instr[..., 3]]
+            v3 = regs[col, instr[..., 4]] if need_v3 else None
+            v4 = regs[col, instr[..., 5]] if need_v4 else None
+
+            lut_tt = (self.luts[col,
+                                np.minimum(imm, self.luts.shape[1] - 1)]
+                      if Op.LUT in wops else None)
+            ld_val = spads[col, v1 % S] if Op.LD in wops else None
+            gld_val = (gmem[((v1 << 16) | v2) % G]
+                       if Op.GLD in wops else None)
+            branches = _alu_branches(wops, v1, v2, v3, v4, imm,
+                                     lut_tt, ld_val, gld_val)
+
+            if len(branches) == 1:
+                result = branches[0][1]
+            else:
+                result = jnp.zeros((W, self.C), U32)
+                for code_op, val in branches:
+                    result = jnp.where(op == int(code_op), val, result)
+
+            # ---- register writes: static (row, cores, dsts) sites; a
+            # merged site has an array row index (one scatter per window) --
+            for (w, cores, dsts) in wr_rows:
+                regs = regs.at[cores, dsts].set(result[w, cores] & 0xFFFF)
+
+            # ---- predicated scratchpad stores ----
+            for (w, cores) in st_rows:
+                pred = v3[w, cores] != 0
+                addr = v1[w, cores] % S
+                spads = spads.at[cores, addr].set(
+                    jnp.where(pred, v2[w, cores], spads[cores, addr]))
+
+            # ---- SEND capture (merged into one exchange scatter) ----
+            for (w, cores, sid) in send_rows:
+                send_idx.append(sid)
+                send_parts.append(v1[w, cores] & 0xFFFF)
+
+            # ---- exceptions ----
+            for (w, cores) in exp_rows:
+                exc = (v1[w, cores] != v2[w, cores]) & (flags[cores] == 0)
+                flags = flags.at[cores].set(
+                    jnp.where(exc, jnp.asarray(imm[w, cores], U32),
+                              flags[cores]))
+
+            # ---- privileged global ops + cache/stall model ----
+            for (w, cores, is_gst) in glb_rows:
+                g_addr = ((v1[w, cores] << 16) | v2[w, cores]) % G
+                if is_gst:
+                    pred = v4[w, cores] != 0
+                    w_addr = jnp.where(pred, g_addr, 0)
+                    gmem = gmem.at[w_addr].set(
+                        jnp.where(pred, v3[w, cores], gmem[w_addr]))
+                    any_g = pred[0]
+                else:
+                    any_g = jnp.bool_(True)
+                line = (g_addr[0] // hw.cache_line_words).astype(jnp.int32)
+                idx = line % self.cache_lines
+                hit = (tags[idx] == line) & any_g
+                miss = (~hit) & any_g
+                tags = tags.at[idx].set(jnp.where(any_g, line, tags[idx]))
+                counters = counters.at[1].add(hit.astype(jnp.uint32))
+                counters = counters.at[2].add(miss.astype(jnp.uint32))
+                counters = counters.at[3].add(
+                    jnp.where(hit, jnp.uint32(hw.cache_hit_stall),
+                              jnp.where(miss,
+                                        jnp.uint32(hw.cache_miss_stall),
+                                        jnp.uint32(0))))
+
+        # ---- BSP exchange: one scatter from the captured SEND values ----
+        if self.n_sends:
+            sid = np.concatenate(send_idx)
+            vals = (jnp.concatenate(send_parts) if len(send_parts) > 1
+                    else send_parts[0])
+            regs = regs.at[self.p.xchg_dst_core[sid],
+                           self.p.xchg_dst_reg[sid]].set(vals)
+        counters = counters.at[0].add(jnp.uint32(1))
+        return (regs, spads, gmem, flags, tags, counters)
+
+    def _chunk_impl(self, cyc, budget, carry):
+        """K predicated Vcycles under one scan: a Vcycle whose start state
+        already carries an exception (or that exceeds the budget) freezes —
+        the machine stops *within* the chunk, exactly at the raising cycle."""
+        def body(c, _):
+            cyc, st = c
+            active = (cyc < budget) & jnp.all(st[3] == 0)
+            st = jax.lax.cond(active, self._vcycle, lambda s: s, st)
+            return (cyc + active.astype(jnp.int32), st), None
+
+        (cyc, carry), _ = jax.lax.scan(body, (cyc, carry), None,
+                                       length=self.chunk)
+        return cyc, carry
+
+    # ------------------------------------------------ seed (baseline) ----
+    def _vcycle_legacy(self, carry):
         if self.backend == "pallas":
             carry, trace = self._vcycle_kernel(carry)
         else:
-            carry, trace = jax.lax.scan(step, carry, self.code)
+            # self._step is the unspecialized (op_set=None) form here
+            carry, trace = _scan_with_trace(self._step, carry, self.code)
         regs, spads, gmem, flags, tags, counters = carry
-        # ---- BSP exchange: deferred SEND register updates ----
         s_slot, s_core, d_core, d_reg = self.xchg
         if s_slot.shape[0]:
             vals = trace[s_slot, s_core]
             regs = regs.at[d_core, d_reg].set(vals)
-        counters = counters.at[0].add(jnp.uint64(1))
+        counters = counters.at[0].add(jnp.uint32(1))
         return (regs, spads, gmem, flags, tags, counters)
 
-    def _run_impl(self, state: MachineState, num_cycles: int) -> MachineState:
+    def _run_legacy(self, state: MachineState, num_cycles: int):
         def cond(c):
             cyc, st = c
             return (cyc < num_cycles) & jnp.all(st[3] == 0)
 
         def body(c):
             cyc, st = c
-            return cyc + 1, self._vcycle(st)
+            return cyc + 1, self._vcycle_legacy(st)
 
         _, out = jax.lax.while_loop(cond, body, (jnp.int32(0), tuple(state)))
         return MachineState(*out)
@@ -235,7 +585,19 @@ class Machine:
     def run(self, state: MachineState, num_cycles: int) -> MachineState:
         """Run up to ``num_cycles`` Vcycles; freezes on the first exception
         (the host services it — paper's global stall + host handshake)."""
-        return self._run(state, num_cycles=num_cycles)
+        if not self.specialize:
+            return self._run(state, num_cycles=num_cycles)
+        num_cycles = int(num_cycles)
+        cyc = jnp.int32(0)
+        budget = jnp.int32(num_cycles)
+        carry = tuple(state)
+        n_launch = -(-num_cycles // self.chunk) if num_cycles > 0 else 0
+        for _ in range(n_launch):
+            cyc, carry = self._run_chunk(cyc, budget, carry)
+            # per-chunk exception check (the only host sync point)
+            if np.asarray(carry[3]).any():
+                break
+        return MachineState(*carry)
 
     def exceptions(self, state: MachineState) -> Dict[int, int]:
         f = np.asarray(state.flags)
@@ -269,3 +631,20 @@ class Machine:
             "stall_cycles": stalls,
             "machine_cycles": vcycles * self.p.vcpl + stalls,
         }
+
+
+def _scan_with_trace(step, carry, code):
+    """Seed-style scan: run the (compact-capture) step but also emit the
+    full per-slot result trace for the legacy exchange."""
+    C = code.shape[1]
+
+    def body(sc, instr):
+        # capture every lane: cap = identity into a [C+1] buffer per slot
+        cap = jnp.arange(C, dtype=jnp.int32)
+        regs, spads, gmem, flags, tags, counters = sc
+        sbuf = jnp.zeros((C + 1,), U32)
+        (regs, spads, gmem, flags, tags, counters, sbuf), _ = step(
+            (regs, spads, gmem, flags, tags, counters, sbuf), (instr, cap))
+        return (regs, spads, gmem, flags, tags, counters), sbuf[:C]
+
+    return jax.lax.scan(body, carry, code)

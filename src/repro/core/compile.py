@@ -44,6 +44,10 @@ class Program:
     outputs: Dict[str, Tuple[int, List[int]]]      # name -> (core, mregs)
     state_regs: Dict[str, List[List[Tuple[int, int]]]]  # reg -> per-word [(core, mreg), ...]
     stats: Dict[str, float] = field(default_factory=dict)
+    # partial-evaluation metadata (filled by compile_circuit; recomputed on
+    # demand for Programs built by hand, e.g. in tests): per-slot opcode
+    # bitmask over the used cores, bit i set iff Op(i) appears in slot i.
+    slot_op_mask: Optional[np.ndarray] = None      # [T] uint64
 
     @property
     def num_cores(self) -> int:
@@ -52,6 +56,84 @@ class Program:
     @property
     def has_global(self) -> bool:
         return bool(self.stats.get("global_ops", 0))
+
+    @property
+    def n_sends(self) -> int:
+        return int(self.xchg_src_core.shape[0])
+
+    def _op_masks(self) -> np.ndarray:
+        if self.slot_op_mask is None:
+            self.slot_op_mask = slot_op_masks(self.code, self.used_cores)
+        return self.slot_op_mask
+
+    def op_set(self) -> frozenset:
+        """Set of opcodes the program actually contains (used cores only).
+
+        This is the compile-time knowledge the engines specialize on: a
+        program with no LUT never pays the 16-pattern loop, one with no
+        GLD/GST skips the cache model entirely, etc.
+        """
+        mask = int(np.bitwise_or.reduce(self._op_masks())) if \
+            self._op_masks().size else 0
+        return frozenset(Op(i) for i in range(64) if (mask >> i) & 1)
+
+    def send_capture(self, C: int) -> np.ndarray:
+        """[T, C] int32 capture-index table: entry (t, c) is the flat SEND
+        index whose value is produced at slot t on core c, or ``n_sends``
+        (a sacrificial slot) everywhere else. The engines scatter each
+        slot's results through this table into a compact ``[n_sends + 1]``
+        buffer instead of materializing the full [T, C] trace."""
+        T = self.code.shape[1]
+        cap = np.full((T, C), self.n_sends, np.int32)
+        for i in range(self.n_sends):
+            t = int(self.xchg_src_slot[i])
+            c = int(self.xchg_src_core[i])
+            if c < C:
+                cap[t, c] = i
+        return cap
+
+
+def slot_groups(program: "Program", C: int):
+    """Partially evaluate the code stream into per-slot opcode groups.
+
+    Returns a list over slots of lists of
+    ``(op, cores, dst, s1, s2, s3, s4, imm, sid)`` — one entry per opcode
+    present in that slot with the (static) core batch executing it, its
+    decoded fields, and each lane's compact SEND-capture index. All-NOP
+    slots produce empty lists, NOP lanes are dropped entirely: both the
+    numpy ISA simulator and the unrolled jnp engine execute *only* the
+    instructions the schedule actually contains.
+    """
+    from .isa import Op as _Op
+    code = program.code[:C]
+    cap = program.send_capture(C)
+    T = code.shape[1]
+    out = []
+    for t in range(T):
+        ops_t = code[:, t, 0]
+        groups = []
+        for opcode in np.unique(ops_t):
+            if opcode == int(_Op.NOP):
+                continue
+            cores = np.nonzero(ops_t == opcode)[0]
+            w = code[cores, t]
+            groups.append((_Op(int(opcode)), cores, w[:, 1], w[:, 2],
+                           w[:, 3], w[:, 4], w[:, 5],
+                           w[:, 6].astype(np.uint32), cap[t, cores]))
+        out.append(groups)
+    return out
+
+
+def slot_op_masks(code: np.ndarray, used_cores: int) -> np.ndarray:
+    """Per-slot opcode-usage bitmask over the first ``used_cores`` cores.
+
+    code is [C, T, 7]; returns [T] uint64 with bit ``op`` set iff any used
+    core executes ``op`` in that slot."""
+    C = max(1, min(used_cores, code.shape[0]))
+    ops = code[:C, :, 0].astype(np.uint64)          # [C, T]
+    masks = np.left_shift(np.uint64(1), ops)        # NOP -> bit 0 (harmless)
+    return np.bitwise_or.reduce(masks, axis=0) if masks.size else \
+        np.zeros((code.shape[1],), np.uint64)
 
 
 def _raw_adjacency(instrs: List[Instr]) -> Dict[int, List[int]]:
@@ -320,6 +402,13 @@ def compile_circuit(circuit: Circuit,
         if all(words):
             state_regs[r.name] = words
 
+    # partial-evaluation metadata: per-slot opcode usage + histogram (the
+    # engines specialize on this; see core.bsp / kernels.vcycle)
+    op_masks = slot_op_masks(code, nproc)
+    opcodes, op_counts = np.unique(code[:nproc, :, 0], return_counts=True)
+    op_histogram = {Op(int(o)).name: int(n)
+                    for o, n in zip(opcodes, op_counts) if o}
+
     stats = dict(sched.stats)
     stats.update(part.stats())
     stats["mem_layout"] = {
@@ -334,6 +423,7 @@ def compile_circuit(circuit: Circuit,
         "global_ops": global_ops,
         "lut_tables": sum(len(t) for t in proc_tables),
         "lut_instrs": int((code[..., 0] == int(Op.LUT)).sum()),
+        "op_histogram": op_histogram,
         "used_cores": nproc,
         "spad_words_max": max(core_spad_used),
         "compile_times": dict(tm),
@@ -347,4 +437,5 @@ def compile_circuit(circuit: Circuit,
         xchg_dst_core=np.array(xd_core, dtype=np.int32),
         xchg_dst_reg=np.array(xd_reg, dtype=np.int32),
         t_compute=sched.t_compute, vcpl=sched.vcpl, used_cores=nproc,
-        outputs=outputs, state_regs=state_regs, stats=stats)
+        outputs=outputs, state_regs=state_regs, stats=stats,
+        slot_op_mask=op_masks)

@@ -6,10 +6,16 @@ becomes **one statically-shaped ``all_to_all``** per Vcycle under
 ``shard_map`` — the BSP superstep's communication phase. Because the compiler
 knows every SEND (source core/slot, destination core/register) at compile
 time, the per-device-pair message matrix is a *static* numpy table: message
-``k`` from device ``s`` to device ``d`` always carries the same (slot, core)
-trace entry into the same (core, register) cell. No runtime routing, no
-dynamic shapes — the schedule is collision-free by construction, exactly as
-on the paper's deflection-free torus.
+``k`` from device ``s`` to device ``d`` always carries the same SEND value
+into the same (core, register) cell. No runtime routing, no dynamic shapes —
+the schedule is collision-free by construction, exactly as on the paper's
+deflection-free torus.
+
+The slot loop is the same partially-evaluated step the single-device engine
+scans (``core.bsp.make_slot_step``): opcode branches specialized to the
+program, and SEND values scattered at trace time into a compact per-device
+buffer — the ``all_to_all`` payload is gathered straight from that buffer,
+never from a [T, C] trace.
 
 Per-device state (register files, scratchpads, flags) lives sharded on the
 ``cores`` axis; the privileged core's global memory rides along sharded per
@@ -25,49 +31,65 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .bsp import MachineState, _slot_step
+from ..distributed.compat import shard_map
+from .bsp import MachineState, make_slot_step
 from .compile import Program
 
 
 class ExchangeTables(NamedTuple):
     """Static per-device message tables ([D, D, M] sharded on axis 0)."""
-    snd_slot: jax.Array   # trace slot to read (source side)
-    snd_core: jax.Array   # local core to read
-    snd_valid: jax.Array  # bool
+    snd_idx: jax.Array    # index into the local compact SEND buffer
     rcv_core: jax.Array   # local core to write (receive side)
     rcv_reg: jax.Array    # machine register to write
     rcv_valid: jax.Array  # bool
 
 
-def _build_exchange(program: Program, D: int, cl: int) -> Tuple[np.ndarray, ...]:
-    """Group the compile-time SEND table by (src_dev, dst_dev)."""
+def _build_exchange(program: Program, D: int, cl: int,
+                    Cp: int) -> Tuple[np.ndarray, ...]:
+    """Group the compile-time SEND table by (src_dev, dst_dev).
+
+    Returns (snd_idx, rcv_core, rcv_reg, rcv_valid, cap, L): each device
+    captures its own SENDs into a compact local buffer of ``L + 1`` words
+    (``cap`` is the [T, Cp] capture-index table, sacrificial index ``L``),
+    and message ``k`` of pair (s, d) reads local buffer slot
+    ``snd_idx[s, d, k]``.
+    """
+    n = program.n_sends
+    T = program.code.shape[1]
+    loc_li = np.zeros((n,), np.int32)        # global send -> local index
+    counts = [0] * D
+    for i in range(n):
+        sd = int(program.xchg_src_core[i]) // cl
+        loc_li[i] = counts[sd]
+        counts[sd] += 1
+    L = max(counts) if counts else 0
+
     msgs: Dict[Tuple[int, int], list] = {}
-    n = program.xchg_src_core.shape[0]
     for i in range(n):
         sc = int(program.xchg_src_core[i]); dc = int(program.xchg_dst_core[i])
         sd, dd = sc // cl, dc // cl
         msgs.setdefault((sd, dd), []).append(
-            (int(program.xchg_src_slot[i]), sc % cl, dc % cl,
-             int(program.xchg_dst_reg[i])))
+            (int(loc_li[i]), dc % cl, int(program.xchg_dst_reg[i])))
     mmax = max((len(v) for v in msgs.values()), default=0)
     mmax = max(mmax, 1)
     shape = (D, D, mmax)
-    snd_slot = np.zeros(shape, np.int32)
-    snd_core = np.zeros(shape, np.int32)
-    snd_valid = np.zeros(shape, bool)
+    snd_idx = np.full(shape, L, np.int32)    # invalid -> sacrificial slot
     rcv_core = np.zeros(shape, np.int32)
     rcv_reg = np.zeros(shape, np.int32)
     rcv_valid = np.zeros(shape, bool)
     for (sd, dd), lst in msgs.items():
-        for k, (slot, score, dcore, dreg) in enumerate(lst):
-            snd_slot[sd, dd, k] = slot
-            snd_core[sd, dd, k] = score
-            snd_valid[sd, dd, k] = True
+        for k, (li, dcore, dreg) in enumerate(lst):
+            snd_idx[sd, dd, k] = li
             # receive tables are indexed by the *receiver*: row = src device
             rcv_core[dd, sd, k] = dcore
             rcv_reg[dd, sd, k] = dreg
             rcv_valid[dd, sd, k] = True
-    return snd_slot, snd_core, snd_valid, rcv_core, rcv_reg, rcv_valid
+
+    cap = np.full((T, Cp), L, np.int32)
+    for i in range(n):
+        cap[int(program.xchg_src_slot[i]),
+            int(program.xchg_src_core[i])] = loc_li[i]
+    return snd_idx, rcv_core, rcv_reg, rcv_valid, cap, L
 
 
 class GridMachine:
@@ -97,9 +119,14 @@ class GridMachine:
         spads = np.zeros((Cp, program.spad_init.shape[1]), np.uint32)
         spads[:C] = program.spad_init[:C]
 
+        (snd_idx, rcv_core, rcv_reg, rcv_valid, cap,
+         L) = _build_exchange(program, D, cl, Cp)
+        self.L = L
+
         sh = lambda *spec: NamedSharding(mesh, P(*spec))
-        # code is [T, Cp, 7]: shard the core axis
+        # code/cap are [T, Cp(, 7)]: shard the core axis
         self.code = jax.device_put(code, sh(None, self.AXIS, None))
+        self.cap = jax.device_put(cap, sh(None, self.AXIS))
         self.luts = jax.device_put(luts, sh(self.AXIS))
         self.reg0 = jax.device_put(regs, sh(self.AXIS))
         self.spad0 = jax.device_put(spads, sh(self.AXIS))
@@ -109,27 +136,28 @@ class GridMachine:
 
         self.xt = ExchangeTables(*[
             jax.device_put(a, sh(self.AXIS))
-            for a in _build_exchange(program, D, cl)])
+            for a in (snd_idx, rcv_core, rcv_reg, rcv_valid)])
         self.cache_lines = hw.cache_words // hw.cache_line_words
+        op_set = program.op_set()
 
-        def device_vcycle(code, luts, regs, spads, gmem, flags, tags,
+        def device_vcycle(code, cap, luts, regs, spads, gmem, flags, tags,
                           counters, xt: ExchangeTables):
             # local shapes: code [T, cl, 7]; gmem [1, G]; tables [1, D, M]
             gmem = gmem[0]
-            local_step = functools.partial(
-                _slot_step, luts, max(spads.shape[1], 1),
-                max(gmem.shape[0], 1), self.cache_lines,
-                hw.cache_line_words, hw.cache_hit_stall, hw.cache_miss_stall)
-            carry = (regs, spads, gmem, flags, tags[0], counters[0])
-            carry, trace = jax.lax.scan(local_step, carry, code)
-            regs, spads, gmem, flags, tags, counters = carry
-            # ---- BSP exchange: one all_to_all per Vcycle ----
-            snd_slot, snd_core, snd_valid = (xt.snd_slot[0], xt.snd_core[0],
-                                             xt.snd_valid[0])
+            local_step = make_slot_step(
+                luts, max(spads.shape[1], 1), max(gmem.shape[0], 1),
+                self.cache_lines, hw.cache_line_words, hw.cache_hit_stall,
+                hw.cache_miss_stall, op_set=op_set)
+            sbuf = jnp.zeros((L + 1,), jnp.uint32)
+            carry = (regs, spads, gmem, flags, tags[0], counters[0], sbuf)
+            carry, _ = jax.lax.scan(local_step, carry, (code, cap))
+            regs, spads, gmem, flags, tags, counters, sbuf = carry
+            # ---- BSP exchange: one all_to_all per Vcycle, payload read
+            # straight from the compact SEND buffer ----
+            out = sbuf[xt.snd_idx[0]]                  # [D, M]
+            inb = jax.lax.all_to_all(out, self.AXIS, 0, 0, tiled=True)
             rcv_core, rcv_reg, rcv_valid = (xt.rcv_core[0], xt.rcv_reg[0],
                                             xt.rcv_valid[0])
-            out = trace[snd_slot, snd_core]            # [D, M]
-            inb = jax.lax.all_to_all(out, self.AXIS, 0, 0, tiled=True)
             # masked scatter: invalid entries land in a sacrificial register
             # column appended to the register file
             pad = jnp.zeros((regs.shape[0], 1), regs.dtype)
@@ -139,15 +167,15 @@ class GridMachine:
                                 regs.shape[1]).reshape(-1)
             regs_x = regs_x.at[dst_core, dst_reg].set(inb.reshape(-1))
             regs = regs_x[:, :-1]
-            counters = counters.at[0].add(jnp.uint64(1))
+            counters = counters.at[0].add(jnp.uint32(1))
             return regs, spads, gmem[None], flags, tags[None], counters[None]
 
         spec_c = P(self.AXIS)
-        self._vcycle = jax.shard_map(
+        self._vcycle = shard_map(
             device_vcycle, mesh=mesh,
-            in_specs=(P(None, self.AXIS, None), spec_c, spec_c, spec_c,
-                      spec_c, spec_c, spec_c, spec_c,
-                      ExchangeTables(*([spec_c] * 6))),
+            in_specs=(P(None, self.AXIS, None), P(None, self.AXIS), spec_c,
+                      spec_c, spec_c, spec_c, spec_c, spec_c, spec_c,
+                      ExchangeTables(*([spec_c] * 4))),
             out_specs=(spec_c, spec_c, spec_c, spec_c, spec_c, spec_c),
             check_vma=False)
 
@@ -160,8 +188,8 @@ class GridMachine:
             def body(c):
                 cyc, st = c
                 regs, spads, gmem, flags, tags, counters = self._vcycle(
-                    self.code, self.luts, st[0], st[1], st[2], st[3], st[4],
-                    st[5], self.xt)
+                    self.code, self.cap, self.luts, st[0], st[1], st[2],
+                    st[3], st[4], st[5], self.xt)
                 return cyc + 1, (regs, spads, gmem, flags, tags, counters)
 
             _, out = jax.lax.while_loop(cond, body,
@@ -180,7 +208,7 @@ class GridMachine:
                                  sh(self.AXIS)),
             cache_tags=jax.device_put(
                 -np.ones((D, self.cache_lines), np.int32), sh(self.AXIS)),
-            counters=jax.device_put(np.zeros((D, 4), np.uint64),
+            counters=jax.device_put(np.zeros((D, 4), np.uint32),
                                     sh(self.AXIS)),
         )
 

@@ -5,10 +5,17 @@ this is ours for the *lower* level: a direct, jit-free executor of the
 binary + exchange schedule. Used heavily by the hypothesis property tests
 (fast per-example, no XLA compile) and as a second, independent oracle
 against the jnp/Pallas engines.
+
+Like the engines, the simulator is partially evaluated against the static
+code stream: at construction every slot is grouped by opcode (the groups
+never change — the schedule is static), so a Vcycle is a handful of
+vectorized numpy ops over core batches instead of a Python loop over every
+(slot, core) pair, and SEND values are captured compactly instead of via a
+full [T, C] trace.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 
@@ -30,106 +37,126 @@ class IsaSim:
         self.gmem = prog.gmem_init.astype(np.uint32).copy()
         self.flags = np.zeros((C,), np.uint32)
         self.cycle = 0
+        # ---- static partial evaluation of the slot loop ----
+        # per slot: one entry per opcode present, with the core batch
+        # executing it (see compile.slot_groups)
+        from .compile import slot_groups
+        self._slots = slot_groups(prog, C)
+        self._n_sends = prog.n_sends
+        self._xd_core = prog.xchg_dst_core
+        self._xd_reg = prog.xchg_dst_reg
 
-    def _exec_one(self, c: int, w) -> int:
-        op, dst, s1, s2, s3, s4, imm = (int(x) for x in w)
-        r = self.regs[c]
-        v1, v2, v3, v4 = int(r[s1]), int(r[s2]), int(r[s3]), int(r[s4])
-        res = 0
-        o = Op(op)
-        if o == Op.NOP:
-            return 0
-        elif o == Op.MOV:
+    # ------------------------------------------------------------------
+    def _exec_group(self, op: Op, cores, dst, s1, s2, s3, s4, imm,
+                    sbuf, sid) -> None:
+        """Execute one (opcode, core-batch) group of a slot, vectorized."""
+        r = self.regs
+        v1 = r[cores, s1]
+        v2 = r[cores, s2]
+        if op == Op.ST:
+            v3 = r[cores, s3]
+            addr = v1 % self.spads.shape[1]
+            m = v3 != 0
+            self.spads[cores[m], addr[m]] = v2[m]
+            return
+        if op == Op.GST:
+            v3 = r[cores, s3]
+            v4 = r[cores, s4]
+            addr = ((v1.astype(np.uint64) << 16) | v2) % len(self.gmem)
+            m = v4 != 0
+            self.gmem[addr[m]] = v3[m]
+            return
+        if op == Op.EXPECT:
+            m = (v1 != v2) & (self.flags[cores] == 0)
+            self.flags[cores[m]] = imm[m]
+            return
+
+        if op == Op.MOV:
             res = v1
-        elif o == Op.MOVI:
+        elif op == Op.MOVI:
             res = imm & M
-        elif o == Op.ADD:
+        elif op == Op.ADD:
             res = (v1 + v2) & M
-        elif o == Op.ADDC:
-            res = (v1 + v2 + v3) & M
-        elif o == Op.CARRY:
-            res = (v1 + v2 + v3) >> 16
-        elif o == Op.SUB:
+        elif op == Op.ADDC:
+            res = (v1 + v2 + r[cores, s3]) & M
+        elif op == Op.CARRY:
+            res = (v1 + v2 + r[cores, s3]) >> 16
+        elif op == Op.SUB:
             res = (v1 - v2) & M
-        elif o == Op.SUBB:
-            res = (v1 - v2 - v3) & M
-        elif o == Op.BORROW:
-            res = 1 if v1 - v2 - v3 < 0 else 0
-        elif o == Op.MUL:
+        elif op == Op.SUBB:
+            res = (v1 - v2 - r[cores, s3]) & M
+        elif op == Op.BORROW:
+            res = (v1 < v2 + r[cores, s3]).astype(np.uint32)
+        elif op == Op.MUL:
             res = (v1 * v2) & M
-        elif o == Op.MULH:
+        elif op == Op.MULH:
             res = (v1 * v2) >> 16
-        elif o == Op.AND:
+        elif op == Op.AND:
             res = v1 & v2
-        elif o == Op.OR:
+        elif op == Op.OR:
             res = v1 | v2
-        elif o == Op.XOR:
+        elif op == Op.XOR:
             res = v1 ^ v2
-        elif o == Op.NOT:
+        elif op == Op.NOT:
             res = (~v1) & M
-        elif o == Op.MUX:
-            res = v2 if v1 else v3
-        elif o == Op.SEQ:
-            res = int(v1 == v2)
-        elif o == Op.SNE:
-            res = int(v1 != v2)
-        elif o == Op.SLTU:
-            res = int(v1 < v2)
-        elif o == Op.SLL:
+        elif op == Op.MUX:
+            res = np.where(v1 != 0, v2, r[cores, s3])
+        elif op == Op.SEQ:
+            res = (v1 == v2).astype(np.uint32)
+        elif op == Op.SNE:
+            res = (v1 != v2).astype(np.uint32)
+        elif op == Op.SLTU:
+            res = (v1 < v2).astype(np.uint32)
+        elif op == Op.SLL:
             res = (v1 << (imm & 15)) & M
-        elif o == Op.SRL:
+        elif op == Op.SRL:
             res = v1 >> (imm & 15)
-        elif o == Op.SRA:
-            sv = v1 - 0x10000 if v1 & 0x8000 else v1
-            res = (sv >> (imm & 15)) & M
-        elif o == Op.SLLV:
+        elif op == Op.SRA:
+            sv = ((v1 ^ 0x8000).astype(np.uint32) - 0x8000).astype(np.int32)
+            res = (sv >> (imm & 15)).astype(np.uint32) & M
+        elif op == Op.SLLV:
             res = (v1 << (v2 & 15)) & M
-        elif o == Op.SRLV:
+        elif op == Op.SRLV:
             res = v1 >> (v2 & 15)
-        elif o == Op.SLICE:
-            res = (v1 >> (imm >> 5)) & ((1 << (imm & 31)) - 1)
-        elif o == Op.LUT:
-            tt = self.luts[c, min(imm, self.luts.shape[1] - 1)]
-            res = 0
-            for j in range(16):
-                pat = ((v1 >> j) & 1) | (((v2 >> j) & 1) << 1) | \
-                    (((v3 >> j) & 1) << 2) | (((v4 >> j) & 1) << 3)
-                res |= ((int(tt[pat]) >> j) & 1) << j
-        elif o == Op.LD:
-            res = int(self.spads[c, v1 % self.spads.shape[1]])
-        elif o == Op.ST:
-            if v3:
-                self.spads[c, v1 % self.spads.shape[1]] = v2
-            return 0
-        elif o == Op.GLD:
-            res = int(self.gmem[((v1 << 16) | v2) % len(self.gmem)])
-        elif o == Op.GST:
-            if v4:
-                self.gmem[((v1 << 16) | v2) % len(self.gmem)] = v3
-            return 0
-        elif o == Op.SEND:
-            return v1            # traced value; no register write
-        elif o == Op.EXPECT:
-            if v1 != v2 and self.flags[c] == 0:
-                self.flags[c] = imm
-            return 0
-        if dst != 0:
-            self.regs[c, dst] = res
-        return res
+        elif op == Op.SLICE:
+            res = (v1 >> (imm >> 5)) & \
+                ((np.uint32(1) << (imm & 31)) - 1)
+        elif op == Op.LUT:
+            tt = self.luts[cores,
+                           np.minimum(imm, self.luts.shape[1] - 1)]  # [n,16]
+            v3 = r[cores, s3]
+            v4 = r[cores, s4]
+            nv = [(~x) & M for x in (v1, v2, v3, v4)]
+            res = np.zeros(len(cores), np.uint32)
+            for p in range(16):
+                pm = (v1 if p & 1 else nv[0]) & (v2 if p & 2 else nv[1]) \
+                    & (v3 if p & 4 else nv[2]) & (v4 if p & 8 else nv[3])
+                res = res | (pm & tt[:, p])
+        elif op == Op.LD:
+            res = self.spads[cores, v1 % self.spads.shape[1]]
+        elif op == Op.GLD:
+            addr = ((v1.astype(np.uint64) << 16) | v2) % len(self.gmem)
+            res = self.gmem[addr]
+        elif op == Op.SEND:
+            sbuf[sid] = v1 & M
+            return
+        else:  # pragma: no cover — exhaustive over the ISA
+            raise ValueError(f"unhandled opcode {op}")
+
+        res = (res & M).astype(np.uint32)
+        sbuf[sid] = res
+        m = dst != 0
+        self.regs[cores[m], dst[m]] = res[m]
 
     def step(self) -> None:
-        """One Vcycle: slot loop + BSP exchange."""
-        T = self.code.shape[1]
-        trace = np.zeros((T, self.C), np.uint32)
-        for t in range(T):
-            for c in range(self.C):
-                if self.code[c, t, 0]:
-                    trace[t, c] = self._exec_one(c, self.code[c, t])
-        p = self.p
-        for i in range(p.xchg_src_core.shape[0]):
-            sc, ss = int(p.xchg_src_core[i]), int(p.xchg_src_slot[i])
-            dc, dr = int(p.xchg_dst_core[i]), int(p.xchg_dst_reg[i])
-            self.regs[dc, dr] = trace[ss, sc]
+        """One Vcycle: grouped vectorized slot loop + compact BSP exchange."""
+        sbuf = np.zeros((self._n_sends + 1,), np.uint32)
+        for groups in self._slots:
+            for (op, cores, dst, s1, s2, s3, s4, imm, sid) in groups:
+                self._exec_group(op, cores, dst, s1, s2, s3, s4, imm,
+                                 sbuf, sid)
+        if self._n_sends:
+            self.regs[self._xd_core, self._xd_reg] = sbuf[:self._n_sends]
         self.cycle += 1
 
     def run(self, max_cycles: int) -> int:

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
+
 
 def make_buckets(params: Any, bucket_bytes: int = 32 << 20) -> List[List[int]]:
     """Greedy fixed-size bucketing of flattened gradient leaves,
@@ -73,7 +75,7 @@ def make_manual_dp_step(loss_fn: Callable, optimizer_apply: Callable,
             loss = jax.lax.pmean(loss, axis)
             return params, opt, dict(metrics, loss=loss, gnorm=gnorm)
 
-        return jax.shard_map(
+        return shard_map(
             shard_body, mesh=mesh,
             in_specs=(P(), P(), P(axis)),
             out_specs=(P(), P(), P()),

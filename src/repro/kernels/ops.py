@@ -1,7 +1,10 @@
 """Jitted wrappers around the Pallas kernels.
 
 ``make_vcycle`` binds a compiled :class:`~repro.core.compile.Program` to the
-Pallas Vcycle kernel with core-count padding to the tile size, and adapts the
+per-Vcycle tiled Pallas kernel (seed path, kept as the ``specialize=False``
+baseline); ``make_vcycle_chunk`` binds it to the chunked K-Vcycle kernel —
+the specialized fast path with VMEM-resident state, in-kernel compact-SEND
+exchange and per-Vcycle exception predication. Both adapt the
 (regs, spads, gmem, flags, tags, counters) carry used by ``core.bsp.Machine``.
 Programs with privileged off-chip traffic (GLD/GST) fall back to the jnp
 engine — the privileged core is special in the paper too (§5.3).
@@ -15,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .vcycle import DEFAULT_TILE, vcycle_pallas
+from .vcycle import DEFAULT_TILE, vcycle_chunk_pallas, vcycle_pallas
 
 
 def make_vcycle(program, C: int, interpret: bool = True,
@@ -49,3 +52,52 @@ def make_vcycle(program, C: int, interpret: bool = True,
         return carry, trace[:, :C]
 
     return vcycle
+
+
+def make_vcycle_chunk(program, C: int, K: int,
+                      interpret: bool = True) -> Callable:
+    """Bind ``program`` to the chunked K-Vcycle kernel.
+
+    Returns ``chunk(cyc, budget, carry) -> (cyc, carry)`` compatible with
+    ``Machine._run_chunk``: one call advances the machine by up to K
+    Vcycles (bounded by ``budget`` and frozen by exceptions), with the BSP
+    exchange performed in-kernel via the compact SEND buffer.
+    """
+    if program.has_global:
+        raise ValueError(
+            "Pallas path does not execute privileged GLD/GST programs; "
+            "use backend='jnp' (the paper's privileged core is also special)")
+    # pad the core axis to the VPU-friendly tile multiple; padded lanes are
+    # all-NOP and never write
+    Cp = ((C + DEFAULT_TILE - 1) // DEFAULT_TILE) * DEFAULT_TILE
+    code = np.zeros((program.code.shape[1], Cp, 7), dtype=np.int32)
+    code[:, :C] = program.code[:C].transpose(1, 0, 2)
+    code_j = jnp.asarray(code)
+    luts_j = jnp.asarray(
+        np.pad(program.luts[:C], ((0, Cp - C), (0, 0), (0, 0))),
+        dtype=jnp.uint32)
+    cap_j = jnp.asarray(program.send_capture(Cp))
+    n_sends = program.n_sends
+    dcore_j = jnp.asarray(np.pad(program.xchg_dst_core, (0, 1 - n_sends))
+                          if n_sends == 0 else program.xchg_dst_core)
+    dreg_j = jnp.asarray(np.pad(program.xchg_dst_reg, (0, 1 - n_sends))
+                         if n_sends == 0 else program.xchg_dst_reg)
+    op_set = program.op_set()
+    pad_c = Cp - C
+
+    def chunk(cyc, budget, carry):
+        regs, spads, gmem, flags, tags, counters = carry
+        regs_p = jnp.pad(regs, ((0, pad_c), (0, 0))) if pad_c else regs
+        spads_p = jnp.pad(spads, ((0, pad_c), (0, 0))) if pad_c else spads
+        flags_p = jnp.pad(flags, ((0, pad_c),)) if pad_c else flags
+        cyc_a = jnp.full((1,), cyc, jnp.int32)
+        budget_a = jnp.full((1,), budget, jnp.int32)
+        regs_o, spads_o, flags_o, nexec = vcycle_chunk_pallas(
+            code_j, cap_j, luts_j, dcore_j, dreg_j, regs_p, spads_p,
+            flags_p, cyc_a, budget_a, K=K, n_sends=n_sends, op_set=op_set,
+            interpret=interpret)
+        counters = counters.at[0].add(nexec[0].astype(jnp.uint32))
+        carry = (regs_o[:C], spads_o[:C], gmem, flags_o[:C], tags, counters)
+        return cyc + nexec[0], carry
+
+    return chunk

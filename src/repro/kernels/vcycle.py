@@ -31,7 +31,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from ..core.bsp import make_slot_step
 from ..core.isa import Op
 
 U32 = jnp.uint32
@@ -181,3 +183,97 @@ def vcycle_pallas(code: jax.Array, luts: jax.Array, regs: jax.Array,
         interpret=interpret,
     )(code, luts, regs, spads, flags)
     return regs_o, spads_o, flags_o, trace
+
+
+# ======================================================================
+# Chunked K-Vcycle kernel (specialized fast path)
+#
+# One launch simulates up to K RTL cycles for the *whole* machine: the
+# register files and scratchpads stay VMEM-resident across all K Vcycles,
+# the BSP exchange happens in-kernel through the compact SEND buffer
+# (``trace_ref`` is gone — [n_sends + 1] words instead of [T, C]), and each
+# Vcycle is predicated on the exception flags so a program that raises
+# mid-chunk freezes at the raising cycle, not at the chunk boundary.
+# ======================================================================
+
+def _chunk_kernel(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
+                  dcore_ref, dreg_ref, regs_in_ref, spads_in_ref,
+                  flags_in_ref, regs_out_ref, spads_out_ref, flags_out_ref,
+                  nexec_ref, *, num_slots: int, K: int, n_sends: int,
+                  op_set, spad_words: int):
+    """Shapes: code [T, C, 7] i32 | cap [T, C] i32 | luts [C, L, 16] u32 |
+    dcore/dreg [max(n_sends,1)] i32 | regs [C, R] u32 | spads [C, S] u32 |
+    flags [C] u32 | cyc/budget/nexec (1,) i32 scalars (SMEM)."""
+    luts = luts_ref[...]
+    # the slot executor is the same partially-evaluated step the jnp engine
+    # scans over; the privileged gmem/cache path never appears here
+    # (``make_vcycle_chunk`` rejects has_global programs), so the extra
+    # carry entries are inert dummies.
+    step = make_slot_step(luts, spad_words, 1, 1, 1, 0, 0, op_set=op_set)
+    dummy_gmem = jnp.zeros((1,), U32)
+    dummy_tags = jnp.zeros((1,), jnp.int32)
+    dummy_cnt = jnp.zeros((4,), U32)
+    base = cyc_ref[0]
+    budget = budget_ref[0]
+
+    def vcycle(k, carry):
+        regs, spads, flags, nexec = carry
+        active = (base + nexec < budget) & jnp.all(flags == 0)
+
+        def slot(t, sc):
+            return step(sc, (code_ref[t], cap_ref[t]))[0]
+
+        sbuf0 = jnp.zeros((n_sends + 1,), U32)
+        regs2, spads2, _, flags2, _, _, sbuf = jax.lax.fori_loop(
+            0, num_slots, slot,
+            (regs, spads, dummy_gmem, flags, dummy_tags, dummy_cnt, sbuf0))
+        if n_sends:
+            regs2 = regs2.at[dcore_ref[...], dreg_ref[...]].set(
+                sbuf[:n_sends])
+        regs = jnp.where(active, regs2, regs)
+        spads = jnp.where(active, spads2, spads)
+        flags = jnp.where(active, flags2, flags)
+        return regs, spads, flags, nexec + active.astype(jnp.int32)
+
+    regs, spads, flags, nexec = jax.lax.fori_loop(
+        0, K, vcycle,
+        (regs_in_ref[...], spads_in_ref[...], flags_in_ref[...],
+         jnp.int32(0)))
+    regs_out_ref[...] = regs
+    spads_out_ref[...] = spads
+    flags_out_ref[...] = flags
+    nexec_ref[0] = nexec
+
+
+def vcycle_chunk_pallas(code: jax.Array, cap: jax.Array, luts: jax.Array,
+                        dcore: jax.Array, dreg: jax.Array, regs: jax.Array,
+                        spads: jax.Array, flags: jax.Array, cyc: jax.Array,
+                        budget: jax.Array, *, K: int, n_sends: int,
+                        op_set=None, interpret: bool = True,
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                   jax.Array]:
+    """Up to K Vcycles for the whole machine in one launch (exchange
+    in-kernel). Returns (regs, spads, flags, n_executed[1])."""
+    T, C, _ = code.shape
+    R = regs.shape[1]
+    S = spads.shape[1]
+
+    kernel = functools.partial(
+        _chunk_kernel, num_slots=T, K=K, n_sends=n_sends, op_set=op_set,
+        spad_words=max(S, 1))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
+    out_shapes = (
+        jax.ShapeDtypeStruct((C, R), regs.dtype),
+        jax.ShapeDtypeStruct((C, S), spads.dtype),
+        jax.ShapeDtypeStruct((C,), flags.dtype),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        in_specs=[smem, smem, vmem, vmem, vmem, vmem, vmem, vmem, vmem,
+                  vmem],
+        out_specs=[vmem, vmem, vmem, smem],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(cyc, budget, code, cap, luts, dcore, dreg, regs, spads, flags)

@@ -8,6 +8,11 @@ several grid sizes.
 """
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings, HealthCheck
 

@@ -1,0 +1,146 @@
+"""The partially-evaluated fast path (PR 1): specialized jnp engine,
+chunked Pallas kernel and vectorized numpy ISA sim, each cross-checked
+against the NetlistSim oracle on every benchmark circuit — plus the two
+behaviours the specialization must not break: SENDs crossing core
+boundaries and exceptions freezing the machine *within* a chunk.
+"""
+import numpy as np
+import pytest
+
+from repro.circuits import CIRCUITS, FINISH, build
+from repro.core.bsp import DEFAULT_CHUNK, Machine
+from repro.core.compile import compile_circuit
+from repro.core.interpreter import NetlistSim
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+
+NAMES = sorted(CIRCUITS)
+HW = HardwareConfig(grid_width=5, grid_height=5)
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    out = {}
+    for nm in NAMES:
+        b = build(nm, "small")
+        prog = compile_circuit(b.circuit, HW)
+        ref = NetlistSim(b.circuit)
+        ref.run(b.n_cycles + 10)
+        out[nm] = (b, prog, ref)
+    return out
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_specialized_jnp_matches_oracle(name, compiled):
+    b, prog, ref = compiled[name]
+    m = Machine(prog)                       # specialize=True is the default
+    st = m.run(m.init_state(), b.n_cycles + 10)
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+    for rname in prog.state_regs:
+        assert m.read_reg(st, rname) == ref.reg_value(rname), rname
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_chunked_pallas_matches_oracle(name, compiled):
+    b, prog, ref = compiled[name]
+    if prog.has_global:
+        pytest.skip("privileged off-chip programs use the jnp engine")
+    m = Machine(prog, backend="pallas", interpret=True)
+    st = m.run(m.init_state(), b.n_cycles + 10)
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+    for rname in prog.state_regs:
+        assert m.read_reg(st, rname) == ref.reg_value(rname), rname
+    # and bit-exact against the jnp fast path, registers included
+    mj = Machine(prog)
+    stj = mj.run(mj.init_state(), b.n_cycles + 10)
+    np.testing.assert_array_equal(np.asarray(st.regs), np.asarray(stj.regs))
+    np.testing.assert_array_equal(np.asarray(st.spads),
+                                  np.asarray(stj.spads))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_vectorized_isasim_matches_oracle(name, compiled):
+    b, prog, ref = compiled[name]
+    sim = IsaSim(prog)
+    assert sim.run(b.n_cycles + 10) == b.n_cycles
+    assert set(sim.exceptions().values()) == {FINISH}
+    for rname in prog.state_regs:
+        assert sim.read_reg(rname) == ref.reg_value(rname), rname
+
+
+def test_cross_core_sends_route_through_compact_buffer(compiled):
+    """The compact SEND capture must carry values across core boundaries —
+    pick a circuit whose exchange table actually crosses cores and check
+    per-cycle bit-exactness of the whole register file."""
+    b, prog, _ = compiled["noc"]
+    cross = prog.xchg_src_core != prog.xchg_dst_core
+    assert cross.any(), "noc must exercise cross-core SENDs"
+    m = Machine(prog)
+    sim = IsaSim(prog)
+    carry = tuple(m.init_state())
+    for cyc in range(8):
+        carry = m._vcycle(carry)
+        sim.step()
+        np.testing.assert_array_equal(np.asarray(carry[0]), sim.regs,
+                                      err_msg=f"cycle {cyc}")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("chunk", [8, DEFAULT_CHUNK])
+def test_exception_freezes_within_chunk(backend, chunk, compiled):
+    """mm raises FINISH at cycle 18 — with chunk sizes 8 and 32 that is
+    mid-chunk both times. The machine must stop exactly there (not at the
+    chunk boundary), with the frozen architectural state intact."""
+    b, prog, ref = compiled["mm"]
+    assert b.n_cycles % chunk != 0
+    m = Machine(prog, backend=backend, chunk=chunk)
+    st = m.run(m.init_state(), 1000)       # budget far past the exception
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+    for rname in prog.state_regs:
+        assert m.read_reg(st, rname) == ref.reg_value(rname), rname
+
+
+def test_no_full_trace_materialized(compiled):
+    """The Vcycle graph must not contain a [T, C] trace intermediate —
+    the exchange reads the compact [n_sends + 1] buffer instead."""
+    import jax
+    _, prog, _ = compiled["noc"]
+    m = Machine(prog)
+    T, C = prog.t_compute, m.C
+    carry = tuple(m.init_state())
+    jaxpr = jax.make_jaxpr(m._vcycle)(carry)
+    shapes = [tuple(v.aval.shape) for eqn in jaxpr.eqns
+              for v in eqn.outvars]
+    assert (T, C) not in shapes
+    assert m.n_sends + 1 < T * C           # the compact buffer is compact
+
+
+def test_scan_fallback_matches_unrolled(compiled, monkeypatch):
+    """Deep schedules (> UNROLL_SLOTS) fall back to a lax.scan over
+    specialized windows — same semantics as the unrolled graph."""
+    import repro.core.bsp as B
+    b, prog, ref = compiled["noc"]
+    monkeypatch.setattr(B, "UNROLL_SLOTS", 0)
+    m = B.Machine(prog)
+    assert not m._unrolled
+    st = m.run(m.init_state(), b.n_cycles + 10)
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    for rname in prog.state_regs:
+        assert m.read_reg(st, rname) == ref.reg_value(rname), rname
+
+
+def test_seed_baseline_still_available(compiled):
+    """specialize=False keeps the seed engine alive as the benchmark
+    baseline, bit-identical to the fast path."""
+    b, prog, _ = compiled["cgra"]
+    m_new = Machine(prog)
+    m_old = Machine(prog, specialize=False)
+    st_new = m_new.run(m_new.init_state(), b.n_cycles + 10)
+    st_old = m_old.run(m_old.init_state(), b.n_cycles + 10)
+    np.testing.assert_array_equal(np.asarray(st_new.regs),
+                                  np.asarray(st_old.regs))
+    np.testing.assert_array_equal(np.asarray(st_new.flags),
+                                  np.asarray(st_old.flags))
