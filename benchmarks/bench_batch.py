@@ -1,0 +1,120 @@
+"""Batched-stimulus throughput: aggregate simulated Vcycles/sec vs. B.
+
+The PR 2 headline: the static BSP schedule is compiled once per *design*,
+so B independent testbench stimuli (different reg/spad/gmem init planes,
+identical code) can share one device launch (``core.bsp.BatchedMachine``).
+This bench measures aggregate throughput (B * vcycles / wall-time) for
+B ∈ {1, 8, 64} against the honest baseline — B *sequential* runs of the
+PR 1 specialized single-stimulus engine — and records per-element
+bit-exactness of the batched run against those baselines.
+
+Emits ``results/bench/BENCH_batch.json`` and a root-level copy
+(``BENCH_batch.json``).
+
+  PYTHONPATH=src python -m benchmarks.bench_batch             # bc mc cgra
+  PYTHONPATH=src python -m benchmarks.bench_batch bc --smoke  # CI smoke
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks.common import best_time, row_csv, run_rows
+from repro.circuits import build
+from repro.core.bsp import BatchedMachine, Machine
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+HW = HardwareConfig(grid_width=5, grid_height=5)
+# full-scale LUT-free circuits spanning the utilization range: dense
+# (bc, cgra), sparse (mc), serial (jpeg) and network (rv32r) schedules
+NAMES = ["bc", "mc", "cgra", "jpeg", "rv32r"]
+BATCHES = [1, 8, 64]
+REPS = 3
+
+
+def _time_batched(bm: BatchedMachine, n: int, reps: int) -> float:
+    def once():
+        jax.block_until_ready(bm.run(bm.init_state(), n).regs)
+    return best_time(once, reps)
+
+
+def _time_sequential(m: Machine, images, n: int, reps: int) -> float:
+    def once():
+        for img in images:
+            st = m.run(m.init_state(images=img), n)
+        jax.block_until_ready(st.regs)
+    return best_time(once, reps)
+
+
+def bench_circuit(nm: str, scale: str, batches, reps: int) -> dict:
+    bmax = max(batches)
+    bench = build(nm, scale, seeds=[1000 + i for i in range(bmax)])
+    prog = compile_circuit(bench.circuit, HW, use_luts=False)
+    images = bench.images(prog)
+    n = min(max(8, bench.n_cycles - 2), 128)
+
+    single = Machine(prog)                 # the PR 1 specialized engine
+    row = {
+        "circuit": nm,
+        "scale": scale,
+        "t_compute": prog.t_compute,
+        "used_cores": prog.used_cores,
+        "lut_free": True,
+        "vcycles": n,
+        "points": [],
+    }
+    for B in batches:
+        imgs = images[:B]
+        bm = BatchedMachine(prog, images=imgs)
+        t_b = _time_batched(bm, n, reps)
+        t_seq = _time_sequential(single, imgs, n, reps)
+        agg_b = B * n / t_b
+        agg_seq = B * n / t_seq
+        row["points"].append({
+            "B": B,
+            "batched_agg_vcycles_per_s": agg_b,
+            "sequential_agg_vcycles_per_s": agg_seq,
+            "speedup_vs_sequential": agg_b / agg_seq,
+        })
+        row_csv(f"batch/{nm}/B{B}", 1e6 * t_b / (B * n),
+                f"{agg_b / agg_seq:.2f}x_vs_seq")
+
+    # per-element bit-exactness at the largest batch, against independent
+    # single-stimulus runs of the same stimuli
+    bm = BatchedMachine(prog, images=images)
+    st = bm.run(bm.init_state(), bench.n_cycles + 10)
+    exact = True
+    for i, img in enumerate(images):
+        s1 = single.run(single.init_state(images=img), bench.n_cycles + 10)
+        exact = exact and (
+            np.array_equal(np.asarray(st.regs[i]), np.asarray(s1.regs))
+            and np.array_equal(np.asarray(st.spads[i]),
+                               np.asarray(s1.spads))
+            and np.array_equal(np.asarray(st.flags[i]),
+                               np.asarray(s1.flags)))
+    row["bit_exact_vs_single"] = bool(exact)
+    row["all_finish"] = bool(all(
+        set(e.values()) == {1} for e in bm.exceptions(st)))
+    return row
+
+
+def run(names=None, smoke: bool = False) -> None:
+    scale = "small" if smoke else "full"
+    batches = [1, 4] if smoke else BATCHES
+    reps = 1 if smoke else REPS
+    run_rows(names or NAMES,
+             lambda nm: bench_circuit(nm, scale, batches, reps),
+             "BENCH_batch", smoke,
+             lambda rows: "best batched speedup vs sequential "
+             "single-stimulus: %.2fx"
+             % max((p["speedup_vs_sequential"]
+                    for r in rows for p in r["points"]), default=0.0))
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    run([a for a in argv if not a.startswith("-")] or None,
+        smoke="--smoke" in argv)

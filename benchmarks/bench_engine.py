@@ -8,49 +8,42 @@ per-Vcycle while_loop), plus the Pallas chunk kernel in interpret mode and
 the vectorized numpy ISA simulator.
 
 Emits ``results/bench/BENCH_engine.json`` and a copy at the repo root
-(``BENCH_engine.json``) so the trajectory is easy to diff across PRs.
+(``BENCH_engine.json``) so the trajectory is easy to diff across PRs. Rows
+are written incrementally and one circuit's failure cannot blank the whole
+artifact (PR 2 fix: the committed artifact had been ``[]``).
 
   PYTHONPATH=src python -m benchmarks.bench_engine            # all circuits
   PYTHONPATH=src python -m benchmarks.bench_engine bc mm      # a subset
+  PYTHONPATH=src python -m benchmarks.bench_engine bc --smoke # CI smoke
 """
 from __future__ import annotations
 
-import json
 import sys
 import time
-from pathlib import Path
 
 import jax
 import numpy as np
 
-from benchmarks.common import RESULTS, emit, row_csv
+from benchmarks.common import best_time, row_csv, run_rows
 from repro.circuits import CIRCUITS, build
 from repro.core.bsp import Machine
 from repro.core.compile import compile_circuit
 from repro.core.isa import HardwareConfig
-from repro.core.isasim import IsaSim
 
 HW = HardwareConfig(grid_width=5, grid_height=5)
 REPS = 3
 
 
-def _rate_machine(m: Machine, n: int) -> float:
-    st = m.init_state()
-    st = m.run(st, n)                      # compile + warm
-    jax.block_until_ready(st.regs)
-    best = float("inf")
-    for _ in range(REPS):
-        st = m.init_state()
-        t0 = time.perf_counter()
-        st = m.run(st, n)
-        jax.block_until_ready(st.regs)
-        best = min(best, time.perf_counter() - t0)
-    return n / best
+def _rate_machine(m: Machine, n: int, reps: int = REPS) -> float:
+    def once():
+        jax.block_until_ready(m.run(m.init_state(), n).regs)
+    return n / best_time(once, reps)
 
 
-def _rate_isasim(prog, n: int) -> float:
+def _rate_isasim(prog, n: int, reps: int = REPS) -> float:
+    from repro.core.isasim import IsaSim
     best = float("inf")
-    for _ in range(REPS):
+    for _ in range(reps):
         sim = IsaSim(prog)
         t0 = time.perf_counter()
         sim.run(n)
@@ -58,62 +51,63 @@ def _rate_isasim(prog, n: int) -> float:
     return n / best
 
 
-def run(names=None) -> None:
-    rows = []
-    for nm in sorted(CIRCUITS):
-        if names and nm not in names:
-            continue
-        b = build(nm, "full")
-        # LUT-free compile: the specialization headline the paper-style
-        # engines target (no 16-pattern loop anywhere in the schedule)
-        prog = compile_circuit(b.circuit, HW, use_luts=False)
-        # stay below the FINISH cycle; cap the cycle count so the slow seed
-        # arm keeps the whole sweep in seconds
-        n = min(max(8, b.n_cycles - 2), 128)
+def bench_circuit(nm: str, scale: str = "full", reps: int = REPS) -> dict:
+    b = build(nm, scale)
+    # LUT-free compile: the specialization headline the paper-style
+    # engines target (no 16-pattern loop anywhere in the schedule)
+    prog = compile_circuit(b.circuit, HW, use_luts=False)
+    # stay below the FINISH cycle; cap the cycle count so the slow seed
+    # arm keeps the whole sweep in seconds
+    n = min(max(8, b.n_cycles - 2), 128)
 
-        row = {
-            "circuit": nm,
-            "t_compute": prog.t_compute,
-            "used_cores": prog.used_cores,
-            "n_sends": prog.n_sends,
-            "n_ops": len(prog.op_set()),
-            "lut_free": True,
-            "vcycles": n,
-        }
-        new = Machine(prog)
-        row["jnp_vcycles_per_s"] = _rate_machine(new, n)
-        seed = Machine(prog, specialize=False)
-        row["seed_vcycles_per_s"] = _rate_machine(seed, n)
-        row["speedup_vs_seed"] = (row["jnp_vcycles_per_s"]
-                                  / row["seed_vcycles_per_s"])
-        row["isasim_vcycles_per_s"] = _rate_isasim(prog, n)
-        if not prog.has_global:
-            pal = Machine(prog, backend="pallas", interpret=True)
-            row["pallas_interpret_vcycles_per_s"] = _rate_machine(pal, n)
-        else:
-            row["pallas_interpret_vcycles_per_s"] = None
+    row = {
+        "circuit": nm,
+        "scale": scale,
+        "t_compute": prog.t_compute,
+        "used_cores": prog.used_cores,
+        "n_sends": prog.n_sends,
+        "n_ops": len(prog.op_set()),
+        "lut_free": True,
+        "vcycles": n,
+    }
+    new = Machine(prog)
+    row["jnp_vcycles_per_s"] = _rate_machine(new, n, reps)
+    seed = Machine(prog, specialize=False)
+    row["seed_vcycles_per_s"] = _rate_machine(seed, n, reps)
+    row["speedup_vs_seed"] = (row["jnp_vcycles_per_s"]
+                              / row["seed_vcycles_per_s"])
+    row["isasim_vcycles_per_s"] = _rate_isasim(prog, n, reps)
+    if not prog.has_global:
+        pal = Machine(prog, backend="pallas", interpret=True)
+        row["pallas_interpret_vcycles_per_s"] = _rate_machine(pal, n, reps)
+    else:
+        row["pallas_interpret_vcycles_per_s"] = None
 
-        # bit-exactness of the fast path against the seed engine
-        st_new = new.run(new.init_state(), b.n_cycles + 10)
-        st_seed = seed.run(seed.init_state(), b.n_cycles + 10)
-        row["bit_exact_vs_seed"] = bool(
-            np.array_equal(np.asarray(st_new.regs), np.asarray(st_seed.regs))
-            and np.array_equal(np.asarray(st_new.spads),
-                               np.asarray(st_seed.spads))
-            and np.array_equal(np.asarray(st_new.flags),
-                               np.asarray(st_seed.flags)))
+    # bit-exactness of the fast path against the seed engine
+    st_new = new.run(new.init_state(), b.n_cycles + 10)
+    st_seed = seed.run(seed.init_state(), b.n_cycles + 10)
+    row["bit_exact_vs_seed"] = bool(
+        np.array_equal(np.asarray(st_new.regs), np.asarray(st_seed.regs))
+        and np.array_equal(np.asarray(st_new.spads),
+                           np.asarray(st_seed.spads))
+        and np.array_equal(np.asarray(st_new.flags),
+                           np.asarray(st_seed.flags)))
+    row_csv(f"engine/{nm}", 1e6 / row["jnp_vcycles_per_s"],
+            f"{row['speedup_vs_seed']:.2f}x_vs_seed")
+    return row
 
-        rows.append(row)
-        row_csv(f"engine/{nm}", 1e6 / row["jnp_vcycles_per_s"],
-                f"{row['speedup_vs_seed']:.2f}x_vs_seed")
 
-    emit("BENCH_engine", rows)
-    # root-level copy: the cross-PR perf trajectory marker
-    root = Path(__file__).resolve().parents[1] / "BENCH_engine.json"
-    root.write_text(json.dumps(rows, indent=1))
-    best = max((r["speedup_vs_seed"] for r in rows), default=0.0)
-    print(f"# best jnp speedup vs seed engine: {best:.2f}x")
+def run(names=None, smoke: bool = False) -> None:
+    scale = "small" if smoke else "full"
+    reps = 1 if smoke else REPS
+    run_rows([nm for nm in sorted(CIRCUITS) if not names or nm in names],
+             lambda nm: bench_circuit(nm, scale, reps),
+             "BENCH_engine", smoke,
+             lambda rows: "best jnp speedup vs seed engine: %.2fx"
+             % max((r["speedup_vs_seed"] for r in rows), default=0.0))
 
 
 if __name__ == "__main__":
-    run([a for a in sys.argv[1:] if not a.startswith("-")] or None)
+    argv = sys.argv[1:]
+    run([a for a in argv if not a.startswith("-")] or None,
+        smoke="--smoke" in argv)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import json
 import time
+import traceback
 from pathlib import Path
 from typing import Callable, Dict, List
 
@@ -31,3 +32,40 @@ def emit(name: str, rows: List[Dict]) -> None:
 
 def row_csv(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def best_time(fn: Callable[[], None], reps: int) -> float:
+    """Warm once (compile/trace), then best-of-``reps`` wall time."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_rows(circuits, bench_one: Callable[[str], Dict], artifact: str,
+             smoke: bool, summary: Callable[[List[Dict]], str]) -> None:
+    """Shared bench driver (bench_engine / bench_batch): per-circuit
+    failure isolation, incremental emit after every row (one circuit's
+    crash can never blank the artifact), a root-level copy of the real
+    (non-smoke) artifact for the cross-PR perf trajectory, and a non-zero
+    exit when anything failed or nothing was measured."""
+    rows: List[Dict] = []
+    failures = 0
+    for nm in circuits:
+        try:
+            rows.append(bench_one(nm))
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            continue
+        emit(artifact + ("_smoke" if smoke else ""), rows)
+    if not smoke and rows:
+        root = Path(__file__).resolve().parents[1] / f"{artifact}.json"
+        root.write_text(json.dumps(rows, indent=1))
+    print(f"# {summary(rows)}")
+    if failures or not rows:
+        raise SystemExit(f"{artifact}: {failures} circuit(s) failed, "
+                         f"{len(rows)} row(s) written")

@@ -57,8 +57,15 @@ SMALL_PARAMS: Dict[str, Dict] = {
 }
 
 
-def build(name: str, scale: str = "full", **overrides) -> Bench:
+def build(name: str, scale: str = "full", seeds=None, **overrides) -> Bench:
+    """Build one benchmark. ``seeds=[s0, s1, ...]`` requests a *batched*
+    bench: one structural netlist (that of ``s0``) plus per-seed init
+    planes (``bench.reg_planes``/``bench.mem_planes``) so a single compiled
+    Program can simulate every stimulus at once (``core.bsp.BatchedMachine``).
+    """
     params = dict(FULL_PARAMS[name] if scale == "full"
                   else SMALL_PARAMS[name])
     params.update(overrides)
+    if seeds is not None:
+        params["seeds"] = list(seeds)
     return CIRCUITS[name](**params)

@@ -5,14 +5,25 @@ assertion-based Verilog test drivers"): the builder computes golden values in
 plain Python while constructing the netlist, embeds them as constants, and
 the circuit EXPECTs equality when its cycle counter reaches ``n_cycles``
 (exception id FINISH fires on success; MISMATCH on a wrong value).
+
+Batched stimuli (PR 2): a builder called with ``seeds=[s0, s1, ...]``
+constructs **one** structural netlist (wires, registers, memories and code
+are those of ``s0``) plus *per-seed init planes* — for every seed-dependent
+value the builder routes the value through :class:`Planes` instead of a
+``c.const``/plain ``c.reg``, so the value lands in *initial state* (register
+file / scratchpad / global-memory images) rather than in instruction
+immediates. All seeds then share the same compiled ``code``/``luts`` and a
+``BatchedMachine`` can simulate every stimulus in a single device launch.
+Golden check values are seed-dependent too, so in batched mode they become
+self-holding registers (``Planes.hold``) initialized per seed.
 """
 from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List
+from typing import Dict, List, Optional, Sequence
 
-from ..core.netlist import Circuit, Sig
+from ..core.netlist import Circuit, Memory, Sig
 
 FINISH = 1        # clean end-of-simulation
 MISMATCH = 2      # golden check failed
@@ -20,11 +31,105 @@ M32 = (1 << 32) - 1
 M16 = (1 << 16) - 1
 
 
+class Planes:
+    """Per-seed init planes collected while building one structural netlist.
+
+    ``live=False`` (a legacy single-seed build) degrades every helper to the
+    plain constructs the pre-batching builders used — ``hold`` becomes
+    ``c.const``, ``reg``/``mem`` plain construction — so existing callers
+    get bit-identical netlists. ``live=True`` records, for each seed, the
+    name → init value (registers) and name → 16-bit-word image (memories)
+    overlays that :meth:`repro.core.compile.Program.init_images` turns into
+    per-stimulus ``reg_init``/``spad_init``/``gmem_init`` arrays.
+    """
+
+    def __init__(self, c: Circuit, n_seeds: int, live: bool):
+        self.c = c
+        self.n = n_seeds
+        self.live = live
+        self.regs: List[Dict[str, int]] = [dict() for _ in range(n_seeds)]
+        self.mems: List[Dict[str, List[int]]] = [dict() for _ in range(n_seeds)]
+
+    def reg(self, width: int, inits: Sequence[int], name: str) -> Sig:
+        """A register whose *initial value* varies per seed."""
+        assert len(inits) == self.n, (name, len(inits), self.n)
+        m = (1 << width) - 1
+        r = self.c.reg(width, init=inits[0] & m, name=name)
+        if self.live:
+            for b in range(self.n):
+                self.regs[b][name] = inits[b] & m
+        return r
+
+    def hold(self, values: Sequence[int], width: int, name: str) -> Sig:
+        """A per-seed 'constant': a self-holding register in batched mode
+        (value lives in the init plane, not in an immediate), a plain
+        shared constant otherwise."""
+        if not self.live:
+            return self.c.const(values[0], width)
+        r = self.reg(width, values, name)
+        self.c.set_next(r, r)
+        return r
+
+    def mem(self, name: str, depth: int, width: int,
+            inits: Sequence[Sequence[int]],
+            is_global: bool = False) -> Memory:
+        """A memory whose init image varies per seed (recorded flattened to
+        the 16-bit words the scratchpad/global images use)."""
+        assert len(inits) == self.n, (name, len(inits), self.n)
+        m = self.c.mem(name, depth, width, init=list(inits[0]),
+                       is_global=is_global)
+        if self.live:
+            stride = (width + 15) // 16
+            emask = (1 << width) - 1
+            for b in range(self.n):
+                words: List[int] = []
+                for v in inits[b]:
+                    v &= emask
+                    for w in range(stride):
+                        words.append((v >> (16 * w)) & M16)
+                self.mems[b][name] = words
+        return m
+
+
+def seed_list(seed: int, seeds: Optional[Sequence[int]]) -> List[int]:
+    """Normalize the (legacy ``seed``, batched ``seeds``) pair."""
+    return [seed] if seeds is None else list(seeds)
+
+
+def make_planes(c: Circuit, seed: int,
+                seeds: Optional[Sequence[int]]) -> "Planes":
+    sl = seed_list(seed, seeds)
+    return Planes(c, len(sl), live=seeds is not None)
+
+
 @dataclass
 class Bench:
     circuit: Circuit
     n_cycles: int            # cycle at which FINISH fires (== cycles to run)
     meta: Dict = field(default_factory=dict)
+    # batched-stimulus metadata (None for legacy single-seed builds):
+    seeds: Optional[List[int]] = None
+    reg_planes: Optional[List[Dict[str, int]]] = None
+    mem_planes: Optional[List[Dict[str, List[int]]]] = None
+
+    @property
+    def batch(self) -> int:
+        return len(self.reg_planes) if self.reg_planes is not None else 1
+
+    def attach(self, planes: Planes, seeds: Sequence[int]) -> "Bench":
+        """Record a live build's planes on this bench (no-op when legacy)."""
+        if planes.live:
+            self.seeds = list(seeds)
+            self.reg_planes = planes.regs
+            self.mem_planes = planes.mems
+        return self
+
+    def images(self, program) -> List:
+        """Per-stimulus (reg_init, spad_init, gmem_init) images for a
+        Program compiled from this bench's circuit."""
+        assert self.reg_planes is not None, "bench was not built with seeds"
+        return [program.init_images(r, m)
+                for r, m in zip(self.reg_planes, self.mem_planes)]
 
 
 def rng(seed: int) -> random.Random:
@@ -76,15 +181,24 @@ def make_counter(c: Circuit, width: int, name: str = "ctr") -> Sig:
 
 
 def finish_and_check(c: Circuit, ctr: Sig, n_cycles: int,
-                     checks: List) -> int:
+                     checks: List, planes: Optional[Planes] = None) -> int:
     """Arm golden checks at ``ctr == n_cycles`` and FINISH one cycle later,
     so a MISMATCH always freezes the machine before the clean finish.
 
+    A check is ``(actual, golden)`` where ``golden`` is an int (shared by
+    every stimulus) or a per-seed sequence (batched builds; the golden
+    becomes a hold-register so it lands in the init planes, keeping the
+    code stream identical across seeds).
+
     Returns the total cycle count at which FINISH fires (what the driver
     should expect from a correct run)."""
+    if planes is None:
+        planes = Planes(c, 1, live=False)
     at_check = ctr.eq(n_cycles)
-    for actual, golden in checks:
-        g = c.const(golden, actual.width)
+    for k, (actual, golden) in enumerate(checks):
+        golds = [golden] * planes.n if isinstance(golden, int) \
+            else list(golden)
+        g = planes.hold(golds, actual.width, f"gold{k}")
         # only differs from golden while the check is armed
         val = c.mux(at_check, actual, g)
         c.expect_eq(val, g, MISMATCH)

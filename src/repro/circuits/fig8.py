@@ -7,20 +7,25 @@ paper."""
 from __future__ import annotations
 
 from ..core.netlist import Circuit
-from .common import Bench, FINISH, make_counter
+from .common import Bench, FINISH, make_counter, make_planes, rng, seed_list
 
 
-def build_membench(kind: str, kib: int, n_cycles: int = 4096) -> Bench:
+def build_membench(kind: str, kib: int, n_cycles: int = 4096,
+                   seed: int = 0, seeds=None) -> Bench:
     assert kind in ("fifo", "ram")
     words = kib * 1024 // 2
     c = Circuit(f"{kind}_{kib}k")
+    sl = seed_list(seed, seeds)
+    planes = make_planes(c, seed, seeds)
     m = c.mem("m", words, 16, is_global=(kib * 1024 > 32768))
     ctr = make_counter(c, 32)
 
     if kind == "fifo":
         addr = ctr  # sequential
     else:
-        x = c.reg(32, init=0x1234567, name="rng")
+        x0s = [0x1234567] if not planes.live else \
+            [rng(s).getrandbits(32) | 1 for s in sl]
+        x = planes.reg(32, x0s, "rng")
         # xorshift-style address scramble (paper: XOR-shift-128; 32 here)
         nx = x ^ (x << 13)
         nx = nx ^ (nx >> 17)
@@ -37,4 +42,5 @@ def build_membench(kind: str, kib: int, n_cycles: int = 4096) -> Bench:
     c.mem_write(m, idx.trunc(32) if idx.width > 32 else idx.zext(32)
                 if idx.width < 32 else idx, rd ^ 0x5A5A, c.const(1, 1))
     c.finish_when(ctr.eq(n_cycles), FINISH)
-    return Bench(c, n_cycles + 1, meta={"kind": kind, "kib": kib})
+    return Bench(c, n_cycles + 1,
+                 meta={"kind": kind, "kib": kib}).attach(planes, sl)

@@ -4,20 +4,28 @@ line buffers), jpeg (serial variable-length decoder). Paper §7.5.
 These stress the scratchpad path: instructions touching one memory must
 colocate on its owner core (paper §6.1), so these designs parallelize poorly
 by construction — exactly the behaviour Table 3 shows for vta/jpeg.
+
+Batched builds (``seeds=[...]``): the seed-dependent data here is mostly
+*memory images* (vta's weight/input buffers, jpeg's Huffman table), which
+already live in init state — they become per-seed scratchpad planes via
+``Planes.mem`` with no structural change at all.
 """
 from __future__ import annotations
 
 from ..core.netlist import Circuit
-from .common import (Bench, M16, M32, finish_and_check, make_counter, rng,
-                     xorshift32_py, xorshift32_sig)
+from .common import (Bench, M16, M32, finish_and_check, make_counter,
+                     make_planes, rng, seed_list, xorshift32_py,
+                     xorshift32_sig)
 
 
 def build_vta(n_cycles: int = 256, depth: int = 256, acc_depth: int = 64,
-              lanes: int = 4, seed: int = 13) -> Bench:
+              lanes: int = 4, seed: int = 13, seeds=None) -> Bench:
     """GEMM core: ``lanes`` parallel MAC lanes, each with its own wgt/inp
     buffers and accumulator scratchpad (paper's vta, 4-lane spatial config,
     buffers divided to fit scratchpads)."""
     c = Circuit("vta")
+    sl = seed_list(seed, seeds)
+    planes = make_planes(c, seed, seeds)
     ctr = make_counter(c, 16)
     lg_acc = (acc_depth - 1).bit_length()
     i = ctr[7:0].zext(16)
@@ -25,11 +33,11 @@ def build_vta(n_cycles: int = 256, depth: int = 256, acc_depth: int = 64,
     checks = []
     csums = {}
     for ln in range(lanes):
-        r = rng(seed + 101 * ln)
-        wgt_v = [r.getrandbits(16) for _ in range(depth)]
-        inp_v = [r.getrandbits(16) for _ in range(depth)]
-        wgt = c.mem(f"wgt{ln}", depth, 16, init=wgt_v)
-        inp = c.mem(f"inp{ln}", depth, 16, init=inp_v)
+        rs = [rng(s + 101 * ln) for s in sl]
+        wgt_vs = [[r.getrandbits(16) for _ in range(depth)] for r in rs]
+        inp_vs = [[r.getrandbits(16) for _ in range(depth)] for r in rs]
+        wgt = planes.mem(f"wgt{ln}", depth, 16, wgt_vs)
+        inp = planes.mem(f"inp{ln}", depth, 16, inp_vs)
         accm = c.mem(f"acc{ln}", acc_depth, 32)
         w = c.mem_read(wgt, i)
         x = c.mem_read(inp, ((i + j) & 0xFF))
@@ -44,33 +52,39 @@ def build_vta(n_cycles: int = 256, depth: int = 256, acc_depth: int = 64,
         probe = c.reg(32, init=0, name=f"probe{ln}")
         c.set_next(probe, c.mem_read(accm, c.const(0, 16)))
 
-        accp = [0] * acc_depth
-        csump, probe_g = 0, 0
-        for t in range(n_cycles):
-            if t == n_cycles - 1:
-                probe_g = accp[0]   # the probe register lags one cycle
-            ip, jp = t & 0xFF, t & (acc_depth - 1)
-            pr = (wgt_v[ip] * inp_v[(ip + jp) & 0xFF]) & M32
-            accp[jp] = (accp[jp] + pr) & M32
-            csump = (csump + pr) & M32
-        checks += [(csum, csump), (probe, probe_g)]
-        csums[f"csum{ln}"] = csump
-    total = finish_and_check(c, ctr, n_cycles, checks)
-    return Bench(c, total, meta=csums)
+        csumps, probes = [], []
+        for wgt_v, inp_v in zip(wgt_vs, inp_vs):
+            accp = [0] * acc_depth
+            csump, probe_g = 0, 0
+            for t in range(n_cycles):
+                if t == n_cycles - 1:
+                    probe_g = accp[0]   # the probe register lags one cycle
+                ip, jp = t & 0xFF, t & (acc_depth - 1)
+                pr = (wgt_v[ip] * inp_v[(ip + jp) & 0xFF]) & M32
+                accp[jp] = (accp[jp] + pr) & M32
+                csump = (csump + pr) & M32
+            csumps.append(csump)
+            probes.append(probe_g)
+        checks += [(csum, csumps), (probe, probes)]
+        csums[f"csum{ln}"] = csumps[0]
+    total = finish_and_check(c, ctr, n_cycles, checks, planes)
+    return Bench(c, total, meta=csums).attach(planes, sl)
 
 
-def build_blur(n_cycles: int = 256, width: int = 32, seed: int = 17) -> Bench:
+def build_blur(n_cycles: int = 256, width: int = 32, seed: int = 17,
+               seeds=None) -> Bench:
     """3x3 Gaussian stencil with two line buffers over a streamed image
     (paper's blur: non-uniform partitioned reuse buffers)."""
     c = Circuit("blur")
-    r = rng(seed)
-    seed_v = r.getrandbits(32) | 1
+    sl = seed_list(seed, seeds)
+    planes = make_planes(c, seed, seeds)
+    seed_vs = [rng(s).getrandbits(32) | 1 for s in sl]
     lb1 = c.mem("lb1", width, 16)
     lb2 = c.mem("lb2", width, 16)
     ctr = make_counter(c, 16)
     col = (ctr & (width - 1))[15:0]
 
-    x = c.reg(32, init=seed_v, name="pixgen")
+    x = planes.reg(32, seed_vs, "pixgen")
     c.set_next(x, xorshift32_sig(c, x))
     pix = x[15:0]
 
@@ -100,43 +114,48 @@ def build_blur(n_cycles: int = 256, width: int = 32, seed: int = 17) -> Bench:
     csum = c.reg(32, init=0, name="csum")
     c.set_next(csum, (csum ^ out) + 1)
 
-    # golden
-    lb1p, lb2p = [0] * width, [0] * width
-    t0p = {k: 0 for k in ("r0", "r1", "r2")}
-    t1p = {k: 0 for k in ("r0", "r1", "r2")}
-    xp, csump = seed_v, 0
-    for t in range(n_cycles):
-        colp = t & (width - 1)
-        pixp = xp & M16
-        r1p, r2p = lb1p[colp], lb2p[colp]
-        srcs = {"r0": r2p, "r1": r1p, "r2": pixp}
-        outp = (t1p["r0"] + 2 * t0p["r0"] + srcs["r0"] +
-                2 * t1p["r1"] + 4 * t0p["r1"] + 2 * srcs["r1"] +
-                t1p["r2"] + 2 * t0p["r2"] + srcs["r2"]) >> 4
-        csump = ((csump ^ outp) + 1) & M32
-        lb2p[colp] = r1p
-        lb1p[colp] = pixp
-        for k in srcs:
-            t1p[k] = t0p[k]
-            t0p[k] = srcs[k]
-        xp = xorshift32_py(xp)
-    total = finish_and_check(c, ctr, n_cycles, [(csum, csump)])
-    return Bench(c, total, meta={"csum": csump})
+    # golden, per seed
+    golds = []
+    for seed_v in seed_vs:
+        lb1p, lb2p = [0] * width, [0] * width
+        t0p = {k: 0 for k in ("r0", "r1", "r2")}
+        t1p = {k: 0 for k in ("r0", "r1", "r2")}
+        xp, csump = seed_v, 0
+        for t in range(n_cycles):
+            colp = t & (width - 1)
+            pixp = xp & M16
+            r1p, r2p = lb1p[colp], lb2p[colp]
+            srcs = {"r0": r2p, "r1": r1p, "r2": pixp}
+            outp = (t1p["r0"] + 2 * t0p["r0"] + srcs["r0"] +
+                    2 * t1p["r1"] + 4 * t0p["r1"] + 2 * srcs["r1"] +
+                    t1p["r2"] + 2 * t0p["r2"] + srcs["r2"]) >> 4
+            csump = ((csump ^ outp) + 1) & M32
+            lb2p[colp] = r1p
+            lb1p[colp] = pixp
+            for k in srcs:
+                t1p[k] = t0p[k]
+                t0p[k] = srcs[k]
+            xp = xorshift32_py(xp)
+        golds.append(csump)
+    total = finish_and_check(c, ctr, n_cycles, [(csum, golds)], planes)
+    return Bench(c, total, meta={"csum": golds[0]}).attach(planes, sl)
 
 
-def build_jpeg(n_cycles: int = 512, seed: int = 23) -> Bench:
+def build_jpeg(n_cycles: int = 512, seed: int = 23, seeds=None) -> Bench:
     """Serial variable-length decoder: a leading-ones length chain, a
     barrel-shifted bit reservoir and a Huffman table lookup form one long
     sequential dependence per cycle (the paper's jpeg: Huffman is the
     bottleneck and parallelism is ~nil)."""
     c = Circuit("jpeg")
-    r = rng(seed)
-    huff_v = [r.getrandbits(16) for _ in range(64)]
-    huff = c.mem("huff", 64, 16, init=huff_v)
-    seed_v = r.getrandbits(32) | 1
+    sl = seed_list(seed, seeds)
+    planes = make_planes(c, seed, seeds)
+    rs = [rng(s) for s in sl]
+    huff_vs = [[r.getrandbits(16) for _ in range(64)] for r in rs]
+    huff = planes.mem("huff", 64, 16, huff_vs)
+    seed_vs = [r.getrandbits(32) | 1 for r in rs]
 
     ctr = make_counter(c, 16)
-    buf = c.reg(32, init=seed_v, name="buf")
+    buf = planes.reg(32, seed_vs, "buf")
     c.set_next(buf, xorshift32_sig(c, buf))
 
     # leading-ones count of the top 8 bits (serial chain)
@@ -154,16 +173,19 @@ def build_jpeg(n_cycles: int = 512, seed: int = 23) -> Bench:
     nxt = ((val << 1) | (val >> 31)) + entry.zext(32) + ones.zext(32)
     c.set_next(val, nxt)
 
-    # golden
-    bufp, valp = seed_v, 0
-    for _ in range(n_cycles):
-        onesp, runp = 0, 1
-        for k in range(8):
-            runp &= (bufp >> (31 - k)) & 1
-            onesp += runp
-        shiftedp = bufp >> onesp
-        symp = shiftedp & 0x3F
-        valp = (((valp << 1) | (valp >> 31)) + huff_v[symp] + onesp) & M32
-        bufp = xorshift32_py(bufp)
-    total = finish_and_check(c, ctr, n_cycles, [(val, valp)])
-    return Bench(c, total, meta={"val": valp})
+    # golden, per seed
+    golds = []
+    for huff_v, seed_v in zip(huff_vs, seed_vs):
+        bufp, valp = seed_v, 0
+        for _ in range(n_cycles):
+            onesp, runp = 0, 1
+            for k in range(8):
+                runp &= (bufp >> (31 - k)) & 1
+                onesp += runp
+            shiftedp = bufp >> onesp
+            symp = shiftedp & 0x3F
+            valp = (((valp << 1) | (valp >> 31)) + huff_v[symp] + onesp) & M32
+            bufp = xorshift32_py(bufp)
+        golds.append(valp)
+    total = finish_and_check(c, ctr, n_cycles, [(val, golds)], planes)
+    return Bench(c, total, meta={"val": golds[0]}).attach(planes, sl)

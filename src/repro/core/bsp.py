@@ -62,6 +62,12 @@ DEFAULT_CHUNK = 32
 # slot count to keep trace/compile time sane on very deep schedules
 UNROLL_SLOTS = 4096
 
+# deep-schedule fallback: the window stream is segmented into runs of
+# windows sharing an opcode set, one specialized lax.scan per run; the
+# segment count is bounded so a wildly heterogeneous schedule cannot blow
+# up trace time (short neighbouring runs merge, unioning their op sets)
+MAX_SCAN_SEGMENTS = 32
+
 # opcodes with no register result (SEND's value goes to the exchange only)
 _NO_WRITE_OPS = (Op.NOP, Op.ST, Op.GST, Op.EXPECT, Op.SEND)
 
@@ -268,6 +274,21 @@ def make_window_step(luts, spad_words, gmem_words, cache_lines, line_words,
     return step
 
 
+def dispatch_chunks(run_chunk, cyc, carry, chunk: int, num_cycles: int,
+                    done):
+    """Host side of the chunked K-Vcycle dispatch, shared by the single,
+    batched and multi-device engines: launch ceil(num_cycles/chunk)
+    chunks, reading the exception flags once per chunk (the only host
+    sync point) and stopping early when ``done(flags)``."""
+    budget = jnp.int32(num_cycles)
+    n_launch = -(-num_cycles // chunk) if num_cycles > 0 else 0
+    for _ in range(n_launch):
+        cyc, carry = run_chunk(cyc, budget, carry)
+        if done(np.asarray(carry[3])):
+            break
+    return carry
+
+
 class Machine:
     """Executable instance of a compiled Program (single host/device).
 
@@ -286,16 +307,19 @@ class Machine:
         self.specialize = specialize
         self.chunk = max(1, int(chunk))
         hw = program.hw
-        # active-core compaction: the FPGA burns idle cores for free, the
-        # interpreter need not simulate them (beyond-paper optimization).
+        # active-core / active-register compaction: the FPGA burns idle
+        # cores and its 2048-entry register file for free, the interpreter
+        # need not simulate them (beyond-paper optimization).
         C = program.used_cores if compact else program.code.shape[0]
         C = max(C, 1)
         self.C = C
+        R = program.used_reg_count() if compact else hw.num_regs
+        self.R = R
         self.code = jnp.asarray(
             np.ascontiguousarray(program.code[:C].transpose(1, 0, 2)),
             dtype=jnp.int32)                                    # [T, C, 7]
         self.luts = jnp.asarray(program.luts[:C], dtype=U32)    # [C, 32, 16]
-        self.reg0 = jnp.asarray(program.reg_init[:C], dtype=U32)
+        self.reg0 = jnp.asarray(program.reg_init[:C, :R], dtype=U32)
         self.spad0 = jnp.asarray(program.spad_init[:C], dtype=U32)
         self.gmem0 = jnp.asarray(program.gmem_init, dtype=U32)
         self.xchg = tuple(jnp.asarray(a) for a in (
@@ -332,14 +356,43 @@ class Machine:
         self._unrolled = (specialize and backend != "pallas"
                           and T <= UNROLL_SLOTS)
         if specialize and backend != "pallas" and not self._unrolled:
-            # deep-schedule fallback: scan over specialized windows
-            self.wcode = jnp.asarray(code_p.reshape(Tp // W, W, C, 7))
-            self.wcap = jnp.asarray(cap_p.reshape(Tp // W, W, C))
-            self._wstep = make_window_step(
-                self.luts, max(self.spad0.shape[1], 1),
-                max(self.gmem0.shape[0], 1), self.cache_lines,
-                hw.cache_line_words, hw.cache_hit_stall,
-                hw.cache_miss_stall, op_set=self.op_set, window=W)
+            # deep-schedule fallback: per-window specialization inside the
+            # scan. Windows are grouped into consecutive runs sharing an
+            # opcode set; each run gets its own window body traced with
+            # only that run's branches (all-NOP windows are dropped — their
+            # capture rows are all-sacrificial by construction), and the
+            # Vcycle executes the runs in schedule order.
+            wcode_np = code_p.reshape(Tp // W, W, C, 7)
+            wcap_np = cap_p.reshape(Tp // W, W, C)
+            runs = []      # [frozenset(ops), [window indices]]
+            for iw in range(Tp // W):
+                wops = frozenset(Op(int(o))
+                                 for o in np.unique(wcode_np[iw, ..., 0])
+                                 if o)
+                if not wops:
+                    continue                       # all-NOP window
+                if runs and runs[-1][0] == wops:
+                    runs[-1][1].append(iw)
+                else:
+                    runs.append([wops, [iw]])
+            while len(runs) > MAX_SCAN_SEGMENTS:
+                k = min(range(len(runs) - 1),
+                        key=lambda i: len(runs[i][1]) + len(runs[i + 1][1]))
+                runs[k] = [runs[k][0] | runs[k + 1][0],
+                           runs[k][1] + runs[k + 1][1]]
+                del runs[k + 1]
+            self._segments = []
+            self._segment_ops = [ops for ops, _ in runs]
+            for seg_ops, idxs in runs:
+                step = make_window_step(
+                    self.luts, max(self.spad0.shape[1], 1),
+                    max(self.gmem0.shape[0], 1), self.cache_lines,
+                    hw.cache_line_words, hw.cache_hit_stall,
+                    hw.cache_miss_stall,
+                    op_set=seg_ops | {Op.NOP}, window=W)
+                self._segments.append(
+                    (step, jnp.asarray(wcode_np[idxs]),
+                     jnp.asarray(wcap_np[idxs])))
         self._windows = []
         if self._unrolled:
             no_write_ops = {int(o) for o in _NO_WRITE_OPS}
@@ -349,42 +402,48 @@ class Machine:
                 opw = instr[..., 0]
                 if not opw.any():
                     continue                                 # all-NOP window
-                wops = frozenset(Op(int(o)) for o in np.unique(opw) if o)
+                # flat active-lane vector: the schedule's NOP lanes are
+                # known statically, so gathers/ALU run over the k non-NOP
+                # (slot, core) lanes only — a low-utilization schedule
+                # (e.g. mc at 13%) pays for the work it contains, not for
+                # the [W, C] rectangle around it
+                w_arr, c_arr = np.nonzero(opw)               # [k], w-major
+                lane = instr[w_arr, c_arr]                   # [k, 7]
+                opl = lane[:, 0]
+                wops = frozenset(Op(int(o)) for o in np.unique(opl))
                 wr_rows, st_rows, send_rows, exp_rows, glb_rows = \
                     [], [], [], [], []
                 for w in range(W):
-                    row = instr[w]
-                    opr = row[:, 0]
-                    wr = np.nonzero((row[:, 1] != 0) &
-                                    ~np.isin(opr, list(no_write_ops)))[0]
+                    in_w = w_arr == w
+                    wr = np.nonzero(in_w & (lane[:, 1] != 0) &
+                                    ~np.isin(opl, list(no_write_ops)))[0]
                     if wr.size:
-                        wr_rows.append((w, wr, row[wr, 1]))
-                    st = np.nonzero(opr == int(Op.ST))[0]
+                        wr_rows.append((wr, c_arr[wr], lane[wr, 1]))
+                    st = np.nonzero(in_w & (opl == int(Op.ST)))[0]
                     if st.size:
-                        st_rows.append((w, st))
-                    sn = np.nonzero(opr == int(Op.SEND))[0]
+                        st_rows.append((st, c_arr[st]))
+                    sn = np.nonzero(in_w & (opl == int(Op.SEND)))[0]
                     if sn.size:
-                        send_rows.append((w, sn, wcapn[w, sn]))
-                    ex = np.nonzero(opr == int(Op.EXPECT))[0]
+                        send_rows.append((sn, wcapn[w, c_arr[sn]]))
+                    ex = np.nonzero(in_w & (opl == int(Op.EXPECT)))[0]
                     if ex.size:
-                        exp_rows.append((w, ex))
+                        exp_rows.append((ex, c_arr[ex]))
                     for gop, is_gst in ((Op.GLD, False), (Op.GST, True)):
-                        gl = np.nonzero(opr == int(gop))[0]
+                        gl = np.nonzero(in_w & (opl == int(gop)))[0]
                         if gl.size:
-                            glb_rows.append((w, gl, is_gst))
+                            glb_rows.append((gl, c_arr[gl], is_gst))
                 # merge the window's register writes into one scatter when
                 # no (core, reg) cell is written twice (WAW inside a RAW
                 # window can only come from dead writes — regalloc never
                 # emits them, but stay exact if it ever does)
                 if len(wr_rows) > 1:
-                    wss = np.concatenate([np.full(c.shape, w, np.int32)
-                                          for (w, c, _) in wr_rows])
+                    sss = np.concatenate([s for (s, _, _) in wr_rows])
                     css = np.concatenate([c for (_, c, _) in wr_rows])
                     dss = np.concatenate([d for (_, _, d) in wr_rows])
                     cells = css.astype(np.int64) * hw.num_regs + dss
                     if np.unique(cells).size == cells.size:
-                        wr_rows = [(wss, css, dss)]
-                self._windows.append((instr, wops, wr_rows, st_rows,
+                        wr_rows = [(sss, css, dss)]
+                self._windows.append((lane, c_arr, wops, wr_rows, st_rows,
                                       send_rows, exp_rows, glb_rows))
 
         if backend == "pallas":
@@ -405,54 +464,79 @@ class Machine:
                                 static_argnames=("num_cycles",))
 
     # ------------------------------------------------------------------
-    def init_state(self) -> MachineState:
+    def init_state(self, images=None) -> MachineState:
+        """Initial machine state; ``images=(reg_init, spad_init, gmem_init)``
+        (full-width arrays, e.g. from ``Program.init_images``) selects a
+        different stimulus than the program's base init."""
+        if images is None:
+            regs, spads, gmem = self.reg0, self.spad0, self.gmem0
+        else:
+            ri, si, gi = images
+            regs = jnp.asarray(np.asarray(ri)[:self.C, :self.R], U32)
+            spads = jnp.asarray(np.asarray(si)[:self.C], U32)
+            gmem = jnp.asarray(np.asarray(gi), U32)
         return MachineState(
-            regs=self.reg0,
-            spads=self.spad0,
-            gmem=self.gmem0,
+            regs=regs,
+            spads=spads,
+            gmem=gmem,
             flags=jnp.zeros((self.C,), U32),
             cache_tags=-jnp.ones((self.cache_lines,), jnp.int32),
             counters=jnp.zeros((4,), jnp.uint32),
         )
 
     # ------------------------------------------------ specialized path ----
-    def _vcycle(self, carry):
+    def _vcycle(self, carry, active=None):
+        """One Vcycle. ``active`` (a traced bool, used by the batched
+        engine under vmap) freezes an inactive element bit-identically:
+        the unrolled path gates each write site individually (no
+        whole-state select); the segmented-scan fallback selects the
+        state leaves once at the Vcycle boundary."""
         if self._unrolled:
-            return self._vcycle_unrolled(carry)
+            return self._vcycle_unrolled(carry, active)
         regs, spads, gmem, flags, tags, counters = carry
         sbuf = jnp.zeros((self.n_sends + 1,), U32)
-        (regs, spads, gmem, flags, tags, counters, sbuf), _ = jax.lax.scan(
-            self._wstep, (regs, spads, gmem, flags, tags, counters, sbuf),
-            (self.wcode, self.wcap), unroll=2)
+        c7 = (regs, spads, gmem, flags, tags, counters, sbuf)
+        for step, wcode, wcap in self._segments:
+            if wcode.shape[0] == 1:
+                c7, _ = step(c7, (wcode[0], wcap[0]))
+            else:
+                c7, _ = jax.lax.scan(step, c7, (wcode, wcap), unroll=2)
+        nregs, nspads, ngmem, nflags, ntags, ncounters, sbuf = c7
         # ---- BSP exchange straight from the compact SEND buffer ----
         if self.n_sends:
             _, _, d_core, d_reg = self.xchg
-            regs = regs.at[d_core, d_reg].set(sbuf[:self.n_sends])
-        counters = counters.at[0].add(jnp.uint32(1))
-        return (regs, spads, gmem, flags, tags, counters)
+            nregs = nregs.at[d_core, d_reg].set(sbuf[:self.n_sends])
+        ncounters = ncounters.at[0].add(jnp.uint32(1))
+        new = (nregs, nspads, ngmem, nflags, ntags, ncounters)
+        if active is None:
+            return new
+        return tuple(jnp.where(active, n, o) for n, o in zip(new, carry))
 
-    def _vcycle_unrolled(self, carry):
+    def _vcycle_unrolled(self, carry, active=None):
         """Fully partially-evaluated Vcycle: the window loop is unrolled
         over the static code stream. Every window traces only the branches
         for *its own* opcodes (the per-slot usage metadata), every
         gather/scatter site (writes, stores, SENDs, EXPECTs, global ops) is
         emitted only where the schedule actually contains one — with
         constant index arrays — and all SEND values merge into a single
-        exchange scatter. The XLA graph *is* the program."""
+        exchange scatter. The XLA graph *is* the program.
+
+        ``active`` gates every write site (see ``_vcycle``): the per-site
+        selects touch only the written cells, so a frozen batch element
+        costs nothing beyond the dead compute it discards."""
         regs, spads, gmem, flags, tags, counters = carry
+        gate = ((lambda p: p) if active is None
+                else (lambda p: p & active))
         hw = self.p.hw
         S = max(self.spad0.shape[1], 1)
         G = max(self.gmem0.shape[0], 1)
         send_idx, send_parts = [], []
 
         for wi in self._windows:
-            (instr, wops, wr_rows, st_rows, send_rows, exp_rows,
+            (lane, c_arr, wops, wr_rows, st_rows, send_rows, exp_rows,
              glb_rows) = wi
-            W = instr.shape[0]
-            col = np.broadcast_to(np.arange(self.C)[None, :],
-                                  (W, self.C))
-            imm = instr[..., 6].astype(np.uint32)
-            op = instr[..., 0]
+            imm = lane[:, 6].astype(np.uint32)
+            op = lane[:, 0]
             # ST/GST operands must also come from the window-start batch:
             # a WAR/ORDER edge lets another instruction overwrite a store's
             # predicate register as little as 1 slot after the store reads
@@ -461,15 +545,15 @@ class Machine:
             need_v3 = bool(wops & {Op.ADDC, Op.CARRY, Op.SUBB, Op.BORROW,
                                    Op.MUX, Op.LUT, Op.ST, Op.GST})
             need_v4 = bool(wops & {Op.LUT, Op.GST})
-            v1 = regs[col, instr[..., 2]]
-            v2 = regs[col, instr[..., 3]]
-            v3 = regs[col, instr[..., 4]] if need_v3 else None
-            v4 = regs[col, instr[..., 5]] if need_v4 else None
+            v1 = regs[c_arr, lane[:, 2]]
+            v2 = regs[c_arr, lane[:, 3]]
+            v3 = regs[c_arr, lane[:, 4]] if need_v3 else None
+            v4 = regs[c_arr, lane[:, 5]] if need_v4 else None
 
-            lut_tt = (self.luts[col,
+            lut_tt = (self.luts[c_arr,
                                 np.minimum(imm, self.luts.shape[1] - 1)]
                       if Op.LUT in wops else None)
-            ld_val = spads[col, v1 % S] if Op.LD in wops else None
+            ld_val = spads[c_arr, v1 % S] if Op.LD in wops else None
             gld_val = (gmem[((v1 << 16) | v2) % G]
                        if Op.GLD in wops else None)
             branches = _alu_branches(wops, v1, v2, v3, v4, imm,
@@ -477,47 +561,54 @@ class Machine:
 
             if len(branches) == 1:
                 result = branches[0][1]
-            else:
-                result = jnp.zeros((W, self.C), U32)
+            elif branches:
+                result = jnp.zeros(v1.shape, U32)
                 for code_op, val in branches:
                     result = jnp.where(op == int(code_op), val, result)
+            else:
+                result = None                  # store/expect-only window
 
-            # ---- register writes: static (row, cores, dsts) sites; a
-            # merged site has an array row index (one scatter per window) --
-            for (w, cores, dsts) in wr_rows:
-                regs = regs.at[cores, dsts].set(result[w, cores] & 0xFFFF)
+            # ---- register writes: static (lane, cores, dsts) sites; a
+            # merged site spans the window (one scatter per window) ----
+            for (sel, cores, dsts) in wr_rows:
+                vals = result[..., sel] & 0xFFFF
+                if active is not None:
+                    vals = jnp.where(active, vals, regs[cores, dsts])
+                regs = regs.at[cores, dsts].set(vals)
 
             # ---- predicated scratchpad stores ----
-            for (w, cores) in st_rows:
-                pred = v3[w, cores] != 0
-                addr = v1[w, cores] % S
+            for (sel, cores) in st_rows:
+                pred = gate(v3[..., sel] != 0)
+                addr = v1[..., sel] % S
                 spads = spads.at[cores, addr].set(
-                    jnp.where(pred, v2[w, cores], spads[cores, addr]))
+                    jnp.where(pred, v2[..., sel], spads[cores, addr]))
 
             # ---- SEND capture (merged into one exchange scatter) ----
-            for (w, cores, sid) in send_rows:
+            for (sel, sid) in send_rows:
                 send_idx.append(sid)
-                send_parts.append(v1[w, cores] & 0xFFFF)
+                send_parts.append(v1[..., sel] & 0xFFFF)
 
             # ---- exceptions ----
-            for (w, cores) in exp_rows:
-                exc = (v1[w, cores] != v2[w, cores]) & (flags[cores] == 0)
+            for (sel, cores) in exp_rows:
+                exc = gate((v1[..., sel] != v2[..., sel])
+                           & (flags[cores] == 0))
                 flags = flags.at[cores].set(
-                    jnp.where(exc, jnp.asarray(imm[w, cores], U32),
+                    jnp.where(exc, jnp.asarray(imm[sel], U32),
                               flags[cores]))
 
             # ---- privileged global ops + cache/stall model ----
-            for (w, cores, is_gst) in glb_rows:
-                g_addr = ((v1[w, cores] << 16) | v2[w, cores]) % G
+            for (sel, cores, is_gst) in glb_rows:
+                g_addr = ((v1[..., sel] << 16) | v2[..., sel]) % G
                 if is_gst:
-                    pred = v4[w, cores] != 0
+                    pred = gate(v4[..., sel] != 0)
                     w_addr = jnp.where(pred, g_addr, 0)
                     gmem = gmem.at[w_addr].set(
-                        jnp.where(pred, v3[w, cores], gmem[w_addr]))
-                    any_g = pred[0]
+                        jnp.where(pred, v3[..., sel], gmem[w_addr]))
+                    any_g = pred[..., 0]
                 else:
-                    any_g = jnp.bool_(True)
-                line = (g_addr[0] // hw.cache_line_words).astype(jnp.int32)
+                    any_g = gate(jnp.bool_(True))
+                line = (g_addr[..., 0]
+                        // hw.cache_line_words).astype(jnp.int32)
                 idx = line % self.cache_lines
                 hit = (tags[idx] == line) & any_g
                 miss = (~hit) & any_g
@@ -533,11 +624,15 @@ class Machine:
         # ---- BSP exchange: one scatter from the captured SEND values ----
         if self.n_sends:
             sid = np.concatenate(send_idx)
+            d_core = self.p.xchg_dst_core[sid]
+            d_reg = self.p.xchg_dst_reg[sid]
             vals = (jnp.concatenate(send_parts) if len(send_parts) > 1
                     else send_parts[0])
-            regs = regs.at[self.p.xchg_dst_core[sid],
-                           self.p.xchg_dst_reg[sid]].set(vals)
-        counters = counters.at[0].add(jnp.uint32(1))
+            if active is not None:
+                vals = jnp.where(active, vals, regs[d_core, d_reg])
+            regs = regs.at[d_core, d_reg].set(vals)
+        counters = counters.at[0].add(jnp.uint32(1) if active is None
+                                      else active.astype(jnp.uint32))
         return (regs, spads, gmem, flags, tags, counters)
 
     def _chunk_impl(self, cyc, budget, carry):
@@ -587,16 +682,9 @@ class Machine:
         (the host services it — paper's global stall + host handshake)."""
         if not self.specialize:
             return self._run(state, num_cycles=num_cycles)
-        num_cycles = int(num_cycles)
-        cyc = jnp.int32(0)
-        budget = jnp.int32(num_cycles)
-        carry = tuple(state)
-        n_launch = -(-num_cycles // self.chunk) if num_cycles > 0 else 0
-        for _ in range(n_launch):
-            cyc, carry = self._run_chunk(cyc, budget, carry)
-            # per-chunk exception check (the only host sync point)
-            if np.asarray(carry[3]).any():
-                break
+        carry = dispatch_chunks(
+            self._run_chunk, jnp.int32(0), tuple(state), self.chunk,
+            int(num_cycles), lambda f: f.any())
         return MachineState(*carry)
 
     def exceptions(self, state: MachineState) -> Dict[int, int]:
@@ -628,6 +716,129 @@ class Machine:
             "vcycles": vcycles,
             "ghits": int(cnt[1]),
             "gmisses": int(cnt[2]),
+            "stall_cycles": stalls,
+            "machine_cycles": vcycles * self.p.vcpl + stalls,
+        }
+
+
+class BatchedMachine(Machine):
+    """B independent stimuli of one compiled Program per device launch.
+
+    The compile-time pipeline (partition → schedule → regalloc →
+    trace/unroll) is paid once per *design*; the accelerator's data-parallel
+    axis then carries B testbenches that share ``code``/``luts`` and differ
+    only in initial state (``Program.init_images`` planes). Every
+    ``MachineState`` leaf gains a leading ``[B]`` axis and the specialized
+    Vcycle graph (unrolled or segmented-scan) is ``jax.vmap``-ed over it.
+
+    Exception semantics are per batch element: element ``b`` freezes at its
+    raising Vcycle (its chunk iterations become no-ops via predication)
+    while the other elements run on; the host syncs the exception flags
+    once per K-Vcycle chunk, exactly like the single-stimulus dispatch.
+
+    ``backend="pallas"`` runs the chunked whole-machine kernel with a grid
+    axis over B, so each batch element's registers/scratchpads stay
+    VMEM-resident for the whole chunk.
+    """
+
+    def __init__(self, program: Program, images=None, batch: Optional[int] = None,
+                 backend: str = "jnp", interpret: bool = True,
+                 compact: bool = True, chunk: int = DEFAULT_CHUNK):
+        # build the jnp machinery (windows/unroll metadata) on the base
+        # Machine; the pallas backend swaps in the batched chunk kernel below
+        super().__init__(program, backend="jnp", compact=compact,
+                         specialize=True, chunk=chunk)
+        if images is None:
+            assert batch is not None and batch >= 1, \
+                "BatchedMachine needs init images or an explicit batch size"
+            B = int(batch)
+            self.breg0 = jnp.broadcast_to(self.reg0, (B,) + self.reg0.shape)
+            self.bspad0 = jnp.broadcast_to(self.spad0,
+                                           (B,) + self.spad0.shape)
+            self.bgmem0 = jnp.broadcast_to(self.gmem0,
+                                           (B,) + self.gmem0.shape)
+        else:
+            B = len(images)
+            C, R = self.C, self.R
+            self.breg0 = jnp.asarray(
+                np.stack([np.asarray(ri)[:C, :R] for ri, _, _ in images]),
+                U32)
+            self.bspad0 = jnp.asarray(
+                np.stack([np.asarray(si)[:C] for _, si, _ in images]), U32)
+            self.bgmem0 = jnp.asarray(
+                np.stack([np.asarray(gi) for _, _, gi in images]), U32)
+        self.B = B
+        self.backend = backend
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            self._run_chunk = jax.jit(kops.make_vcycle_chunk(
+                program, self.C, self.chunk, interpret=interpret, batch=B))
+        else:
+            self._run_chunk = jax.jit(self._bchunk_impl)
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> MachineState:
+        B = self.B
+        return MachineState(
+            regs=self.breg0,
+            spads=self.bspad0,
+            gmem=self.bgmem0,
+            flags=jnp.zeros((B, self.C), U32),
+            cache_tags=-jnp.ones((B, self.cache_lines), jnp.int32),
+            counters=jnp.zeros((B, 4), jnp.uint32),
+        )
+
+    def _bchunk_impl(self, cyc, budget, carry):
+        """K Vcycles for all B elements under one scan; element b freezes
+        (its state stops advancing) from its raising Vcycle on. The freeze
+        predicate rides *into* the vmapped Vcycle — per-write-site gating
+        on the unrolled path (no whole-state select per Vcycle), a
+        per-Vcycle leaf select on the deep-schedule fallback."""
+        def body(c, _):
+            cyc, st = c
+            active = (cyc < budget) & jnp.all(st[3] == 0, axis=1)   # [B]
+            st = jax.vmap(self._vcycle)(st, active)
+            return (cyc + active.astype(jnp.int32), st), None
+
+        (cyc, carry), _ = jax.lax.scan(body, (cyc, carry), None,
+                                       length=self.chunk)
+        return cyc, carry
+
+    def run(self, state: MachineState, num_cycles: int) -> MachineState:
+        # stop dispatching only once *every* element froze
+        carry = dispatch_chunks(
+            self._run_chunk, jnp.zeros((self.B,), jnp.int32), tuple(state),
+            self.chunk, int(num_cycles), lambda f: f.any(axis=1).all())
+        return MachineState(*carry)
+
+    # ---------------------------------------------- per-element access ----
+    def element(self, state: MachineState, b: int) -> MachineState:
+        """Single-stimulus view of batch element ``b`` (host-side)."""
+        return MachineState(*(leaf[b] for leaf in state))
+
+    def exceptions(self, state: MachineState, b: Optional[int] = None):
+        if b is not None:
+            return super().exceptions(self.element(state, b))
+        return [super(BatchedMachine, self).exceptions(self.element(state, i))
+                for i in range(self.B)]
+
+    def read_output(self, state: MachineState, name: str, b: int = 0) -> int:
+        return super().read_output(self.element(state, b), name)
+
+    def read_reg(self, state: MachineState, rtl_name: str, b: int = 0) -> int:
+        return super().read_reg(self.element(state, b), rtl_name)
+
+    def perf(self, state: MachineState, b: Optional[int] = None):
+        if b is not None:
+            return super().perf(self.element(state, b))
+        cnt = np.asarray(state.counters)
+        vcycles = int(cnt[:, 0].sum())
+        stalls = int(cnt[:, 3].sum())
+        return {
+            "batch": self.B,
+            "vcycles": vcycles,                 # aggregate over the batch
+            "ghits": int(cnt[:, 1].sum()),
+            "gmisses": int(cnt[:, 2].sum()),
             "stall_cycles": stalls,
             "machine_cycles": vcycles * self.p.vcpl + stalls,
         }

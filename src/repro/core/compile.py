@@ -66,6 +66,21 @@ class Program:
             self.slot_op_mask = slot_op_masks(self.code, self.used_cores)
         return self.slot_op_mask
 
+    def used_reg_count(self) -> int:
+        """Number of machine registers the program can ever touch (max
+        register index referenced by any used core's code or by the
+        exchange, plus one). Register allocation only hands out registers
+        that some instruction references, so slicing every per-core
+        register file to this width is lossless — and it is what makes
+        batched state ([B, C, R]) cache/VMEM-friendly: the paper's
+        2048-entry BRAM file is free in hardware, but an interpreter
+        should not carry the unused tail."""
+        C = max(1, min(self.used_cores, self.code.shape[0]))
+        r = int(self.code[:C, :, 1:6].max()) if self.code.size else 0
+        if self.n_sends:
+            r = max(r, int(self.xchg_dst_reg.max()))
+        return min(r + 1, self.hw.num_regs)
+
     def op_set(self) -> frozenset:
         """Set of opcodes the program actually contains (used cores only).
 
@@ -76,6 +91,43 @@ class Program:
         mask = int(np.bitwise_or.reduce(self._op_masks())) if \
             self._op_masks().size else 0
         return frozenset(Op(i) for i in range(64) if (mask >> i) & 1)
+
+    def init_images(self, reg_plane: Dict[str, int],
+                    mem_plane: Optional[Dict[str, List[int]]] = None
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Apply one stimulus init plane to the base binary images.
+
+        ``reg_plane`` maps RTL register name -> init value; every machine
+        register holding a word of that register (owner *and* duplicated
+        reader copies, from ``state_regs``) is patched. ``mem_plane`` maps
+        memory name -> flattened 16-bit word image, placed at the memory's
+        base via ``stats["mem_layout"]``. Returns fresh
+        ``(reg_init, spad_init, gmem_init)`` arrays — the compiled
+        ``code``/``luts`` are untouched, which is the whole point: B
+        stimuli share one schedule and differ only in initial state.
+        """
+        reg_init = self.reg_init.copy()
+        spad_init = self.spad_init.copy()
+        gmem_init = self.gmem_init.copy()
+        for name, val in reg_plane.items():
+            words = self.state_regs.get(name)
+            assert words is not None, (
+                f"register {name!r} not in state_regs — its words were "
+                "optimized away and cannot carry a per-stimulus init")
+            for j, locs in enumerate(words):
+                w = (int(val) >> (16 * j)) & WORD_MASK
+                for (core, mreg) in locs:
+                    reg_init[core, mreg] = w
+        layout = self.stats.get("mem_layout", {})
+        for name, image in (mem_plane or {}).items():
+            core, base, size, is_global = layout[name]
+            w = np.asarray(image, dtype=np.uint16)
+            assert w.shape[0] <= size, (name, w.shape[0], size)
+            if is_global:
+                gmem_init[base:base + w.shape[0]] = w
+            else:
+                spad_init[core, base:base + w.shape[0]] = w
+        return reg_init, spad_init, gmem_init
 
     def send_capture(self, C: int) -> np.ndarray:
         """[T, C] int32 capture-index table: entry (t, c) is the flat SEND

@@ -32,7 +32,9 @@ class IsaSim:
         self.C = C
         self.code = prog.code[:C]          # [C, T, 7]
         self.luts = prog.luts[:C].astype(np.uint32)
-        self.regs = prog.reg_init[:C].astype(np.uint32).copy()
+        # active-register compaction, mirroring core.bsp.Machine
+        self.R = prog.used_reg_count()
+        self.regs = prog.reg_init[:C, :self.R].astype(np.uint32).copy()
         self.spads = prog.spad_init[:C].astype(np.uint32).copy()
         self.gmem = prog.gmem_init.astype(np.uint32).copy()
         self.flags = np.zeros((C,), np.uint32)

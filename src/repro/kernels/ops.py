@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .vcycle import DEFAULT_TILE, vcycle_chunk_pallas, vcycle_pallas
+from .vcycle import (DEFAULT_TILE, vcycle_chunk_pallas,
+                     vcycle_chunk_pallas_batched, vcycle_pallas)
 
 
 def make_vcycle(program, C: int, interpret: bool = True,
@@ -54,14 +55,19 @@ def make_vcycle(program, C: int, interpret: bool = True,
     return vcycle
 
 
-def make_vcycle_chunk(program, C: int, K: int,
-                      interpret: bool = True) -> Callable:
+def make_vcycle_chunk(program, C: int, K: int, interpret: bool = True,
+                      batch: int = None) -> Callable:
     """Bind ``program`` to the chunked K-Vcycle kernel.
 
     Returns ``chunk(cyc, budget, carry) -> (cyc, carry)`` compatible with
     ``Machine._run_chunk``: one call advances the machine by up to K
     Vcycles (bounded by ``budget`` and frozen by exceptions), with the BSP
     exchange performed in-kernel via the compact SEND buffer.
+
+    ``batch=B`` binds the batched-stimulus kernel instead: the carry
+    leaves have a leading [B] axis, ``cyc`` is ``[B]`` and the kernel runs
+    one grid step per batch element (each element's state VMEM-resident
+    for the whole chunk, exceptions frozen per element).
     """
     if program.has_global:
         raise ValueError(
@@ -84,6 +90,26 @@ def make_vcycle_chunk(program, C: int, K: int,
                          if n_sends == 0 else program.xchg_dst_reg)
     op_set = program.op_set()
     pad_c = Cp - C
+
+    if batch is not None:
+        def bchunk(cyc, budget, carry):
+            regs, spads, gmem, flags, tags, counters = carry
+            pad2 = ((0, 0), (0, pad_c), (0, 0))
+            regs_p = jnp.pad(regs, pad2) if pad_c else regs
+            spads_p = jnp.pad(spads, pad2) if pad_c else spads
+            flags_p = (jnp.pad(flags, ((0, 0), (0, pad_c)))
+                       if pad_c else flags)
+            budget_a = jnp.full((1,), budget, jnp.int32)
+            regs_o, spads_o, flags_o, nexec = vcycle_chunk_pallas_batched(
+                code_j, cap_j, luts_j, dcore_j, dreg_j, regs_p, spads_p,
+                flags_p, cyc.astype(jnp.int32), budget_a, K=K,
+                n_sends=n_sends, op_set=op_set, interpret=interpret)
+            counters = counters.at[:, 0].add(nexec.astype(jnp.uint32))
+            carry = (regs_o[:, :C], spads_o[:, :C], gmem,
+                     flags_o[:, :C], tags, counters)
+            return cyc + nexec, carry
+
+        return bchunk
 
     def chunk(cyc, budget, carry):
         regs, spads, gmem, flags, tags, counters = carry

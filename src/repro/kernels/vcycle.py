@@ -245,6 +245,109 @@ def _chunk_kernel(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
     nexec_ref[0] = nexec
 
 
+def _chunk_kernel_batched(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
+                          dcore_ref, dreg_ref, regs_in_ref, spads_in_ref,
+                          flags_in_ref, regs_out_ref, spads_out_ref,
+                          flags_out_ref, nexec_ref, *, num_slots: int, K: int,
+                          n_sends: int, op_set, spad_words: int):
+    """Batched-stimulus variant of ``_chunk_kernel``: one grid step per
+    batch element. The shared program (code/cap/luts/exchange tables) is the
+    same block for every step; the per-element state blocks are
+    [1, C, R]/[1, C, S]/[1, C] so each element's registers and scratchpads
+    stay VMEM-resident across all K Vcycles of its chunk. Exceptions are
+    per element: this element's flags predicate only this element's
+    Vcycles."""
+    luts = luts_ref[...]
+    step = make_slot_step(luts, spad_words, 1, 1, 1, 0, 0, op_set=op_set)
+    dummy_gmem = jnp.zeros((1,), U32)
+    dummy_tags = jnp.zeros((1,), jnp.int32)
+    dummy_cnt = jnp.zeros((4,), U32)
+    base = cyc_ref[0]
+    budget = budget_ref[0]
+
+    def vcycle(k, carry):
+        regs, spads, flags, nexec = carry
+        active = (base + nexec < budget) & jnp.all(flags == 0)
+
+        def slot(t, sc):
+            return step(sc, (code_ref[t], cap_ref[t]))[0]
+
+        sbuf0 = jnp.zeros((n_sends + 1,), U32)
+        regs2, spads2, _, flags2, _, _, sbuf = jax.lax.fori_loop(
+            0, num_slots, slot,
+            (regs, spads, dummy_gmem, flags, dummy_tags, dummy_cnt, sbuf0))
+        if n_sends:
+            regs2 = regs2.at[dcore_ref[...], dreg_ref[...]].set(
+                sbuf[:n_sends])
+        regs = jnp.where(active, regs2, regs)
+        spads = jnp.where(active, spads2, spads)
+        flags = jnp.where(active, flags2, flags)
+        return regs, spads, flags, nexec + active.astype(jnp.int32)
+
+    regs, spads, flags, nexec = jax.lax.fori_loop(
+        0, K, vcycle,
+        (regs_in_ref[0], spads_in_ref[0], flags_in_ref[0], jnp.int32(0)))
+    regs_out_ref[0] = regs
+    spads_out_ref[0] = spads
+    flags_out_ref[0] = flags
+    nexec_ref[0] = nexec
+
+
+def vcycle_chunk_pallas_batched(code: jax.Array, cap: jax.Array,
+                                luts: jax.Array, dcore: jax.Array,
+                                dreg: jax.Array, regs: jax.Array,
+                                spads: jax.Array, flags: jax.Array,
+                                cyc: jax.Array, budget: jax.Array, *,
+                                K: int, n_sends: int, op_set=None,
+                                interpret: bool = True,
+                                ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                           jax.Array]:
+    """Up to K Vcycles for B whole machines in one launch (grid over B).
+    regs [B, C, R] | spads [B, C, S] | flags [B, C] | cyc [B] | budget [1].
+    Returns (regs, spads, flags, n_executed[B])."""
+    T, C, _ = code.shape
+    B, _, R = regs.shape
+    S = spads.shape[2]
+    L = luts.shape[1]
+    M = dcore.shape[0]
+
+    kernel = functools.partial(
+        _chunk_kernel_batched, num_slots=T, K=K, n_sends=n_sends,
+        op_set=op_set, spad_words=max(S, 1))
+    smem = lambda shp, im: pl.BlockSpec(shp, im,
+                                        memory_space=pltpu.SMEM)
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, C, R), regs.dtype),
+        jax.ShapeDtypeStruct((B, C, S), spads.dtype),
+        jax.ShapeDtypeStruct((B, C), flags.dtype),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            smem((1,), lambda b: (b,)),                  # cyc
+            smem((1,), lambda b: (0,)),                  # budget
+            pl.BlockSpec((T, C, 7), lambda b: (0, 0, 0)),
+            pl.BlockSpec((T, C), lambda b: (0, 0)),
+            pl.BlockSpec((C, L, 16), lambda b: (0, 0, 0)),
+            pl.BlockSpec((M,), lambda b: (0,)),
+            pl.BlockSpec((M,), lambda b: (0,)),
+            pl.BlockSpec((1, C, R), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C, S), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, R), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C, S), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, C), lambda b: (b, 0)),
+            smem((1,), lambda b: (b,)),                  # nexec
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(cyc, budget, code, cap, luts, dcore, dreg, regs, spads, flags)
+
+
 def vcycle_chunk_pallas(code: jax.Array, cap: jax.Array, luts: jax.Array,
                         dcore: jax.Array, dreg: jax.Array, regs: jax.Array,
                         spads: jax.Array, flags: jax.Array, cyc: jax.Array,
