@@ -1,0 +1,117 @@
+"""Middle-end payoff: instruction count, VCPL and throughput, opt on vs off.
+
+Third entry in the repo's perf trajectory (PR 3): the optimizing middle-end
+(``core.opt`` — constant folding, copy propagation, strength reduction,
+CSE, DCE over the lowered SSA IR) runs between lower and partition, so the
+partitioner, LUT synthesizer and scheduler all see fewer, simpler
+instructions. Per circuit this bench records post-lower vs post-opt
+instruction counts, scheduled VCPL (with the schedule's critical-path
+lower bound, to tell "improved" from "already provably minimal"), compile
+time, and measured simulated-Vcycles/sec of the specialized jnp engine on
+the optimized vs legacy program.
+
+Compile-model metrics (instrs, VCPL, sends) are reported on the paper's
+15x15 evaluation grid — the same grid as ``fig9_partitioning`` /
+``table8_compile_time``, so Table 4/8 stay comparable; engine throughput
+is measured on the 5x5 bench grid the other trajectory benches use.
+(Small grids can show VCPL *regressions* on dense circuits: with fewer
+instructions the communication-aware merge goes further, trading Sends
+for per-core serialization — e.g. cgra on 5x5. That is the partitioner's
+cost model ignoring the critical path, the ROADMAP's next lever, not the
+middle-end; ``vcpl_small_*`` columns keep it visible.)
+
+Emits ``results/bench/BENCH_compile.json`` (root copy via
+``benchmarks.common.emit``, the single artifact writer).
+
+  PYTHONPATH=src python -m benchmarks.bench_compile             # all nine
+  PYTHONPATH=src python -m benchmarks.bench_compile bc --smoke  # CI smoke
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+from benchmarks.common import best_time, row_csv, run_rows
+from repro.circuits import CIRCUITS, build
+from repro.core.bsp import Machine
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+HW_RUN = HardwareConfig(grid_width=5, grid_height=5)     # throughput grid
+HW_PAPER = HardwareConfig(grid_width=15, grid_height=15)  # compile metrics
+REPS = 3
+
+
+def _rate(prog, n: int, reps: int) -> float:
+    m = Machine(prog)
+
+    def once():
+        jax.block_until_ready(m.run(m.init_state(), n).regs)
+    return n / best_time(once, reps)
+
+
+def bench_circuit(nm: str, scale: str, reps: int) -> dict:
+    b = build(nm, scale)
+    row = {"circuit": nm, "scale": scale,
+           "grid_compile": [HW_PAPER.grid_width, HW_PAPER.grid_height],
+           "grid_run": [HW_RUN.grid_width, HW_RUN.grid_height]}
+    progs = {}
+    for key, opt in (("opt", True), ("off", False)):
+        t0 = time.perf_counter()
+        p = compile_circuit(b.circuit, HW_PAPER, optimize=opt)
+        row[f"compile_s_{key}"] = time.perf_counter() - t0
+        progs[key] = p
+        row[f"instrs_{key}"] = p.stats["instrs"]        # scheduled (+Sends)
+        row[f"vcpl_{key}"] = p.vcpl
+        row[f"sends_{key}"] = p.stats["sends"]
+        row[f"used_cores_{key}"] = p.used_cores
+    run_progs = {key: compile_circuit(b.circuit, HW_RUN, optimize=opt)
+                 for key, opt in (("opt", True), ("off", False))}
+    row["vcpl_small_opt"] = run_progs["opt"].vcpl
+    row["vcpl_small_off"] = run_progs["off"].vcpl
+    po = progs["opt"]
+    row["instrs_lowered"] = po.stats["instrs_lowered"]
+    row["instrs_post_opt"] = po.stats["instrs_opt"]
+    row["instr_reduction_pct"] = 100.0 * (
+        1 - po.stats["instrs_opt"] / max(po.stats["instrs_lowered"], 1))
+    row["vcpl_ratio"] = row["vcpl_opt"] / max(row["vcpl_off"], 1)
+    row["crit_path_lb"] = po.stats["crit_path_lb"]
+    row["sched_minimal"] = bool(po.stats["sched_minimal"])
+    # per-pass breakdown (aggregated over pipeline rounds)
+    passes = {}
+    for r in po.stats["opt_passes"]:
+        agg = passes.setdefault(r["pass"], {"seconds": 0.0, "removed": 0})
+        agg["seconds"] += r["seconds"]
+        agg["removed"] += r["instrs_before"] - r["instrs_after"]
+    row["opt_pass_breakdown"] = passes
+    n = min(max(8, b.n_cycles - 2), 128)
+    row["vcycles"] = n
+    row["jnp_vcycles_per_s_opt"] = _rate(run_progs["opt"], n, reps)
+    row["jnp_vcycles_per_s_off"] = _rate(run_progs["off"], n, reps)
+    row["speedup_vs_off"] = (row["jnp_vcycles_per_s_opt"]
+                             / row["jnp_vcycles_per_s_off"])
+    row_csv(f"compile/{nm}", 1e6 / row["jnp_vcycles_per_s_opt"],
+            f"instr -{row['instr_reduction_pct']:.1f}% "
+            f"vcpl {row['vcpl_off']}->{row['vcpl_opt']} "
+            f"{row['speedup_vs_off']:.2f}x_vs_off")
+    return row
+
+
+def run(names=None, smoke: bool = False) -> None:
+    scale = "small" if smoke else "full"
+    reps = 1 if smoke else REPS
+    run_rows([nm for nm in sorted(CIRCUITS) if not names or nm in names],
+             lambda nm: bench_circuit(nm, scale, reps),
+             "BENCH_compile", smoke,
+             lambda rows: "mean instr reduction %.1f%%, best engine speedup "
+             "%.2fx" % (
+                 sum(r["instr_reduction_pct"] for r in rows) / max(len(rows), 1),
+                 max((r["speedup_vs_off"] for r in rows), default=0.0)))
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    run([a for a in argv if not a.startswith("-")] or None,
+        smoke="--smoke" in argv)

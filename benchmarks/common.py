@@ -26,8 +26,15 @@ def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
     return best
 
 
-def emit(name: str, rows: List[Dict]) -> None:
-    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+def emit(name: str, rows: List[Dict], root: bool = False) -> None:
+    """Single writer for benchmark artifacts. ``results/bench/<name>.json``
+    is canonical; ``root=True`` additionally refreshes the repo-root copy
+    (``<name>.json``) used for the cross-PR perf trajectory. No bench
+    module writes either location itself."""
+    text = json.dumps(rows, indent=1)
+    (RESULTS / f"{name}.json").write_text(text)
+    if root:
+        (RESULTS.parents[1] / f"{name}.json").write_text(text)
 
 
 def row_csv(name: str, us_per_call: float, derived: str) -> None:
@@ -63,8 +70,7 @@ def run_rows(circuits, bench_one: Callable[[str], Dict], artifact: str,
             continue
         emit(artifact + ("_smoke" if smoke else ""), rows)
     if not smoke and rows:
-        root = Path(__file__).resolve().parents[1] / f"{artifact}.json"
-        root.write_text(json.dumps(rows, indent=1))
+        emit(artifact, rows, root=True)
     print(f"# {summary(rows)}")
     if failures or not rows:
         raise SystemExit(f"{artifact}: {failures} circuit(s) failed, "

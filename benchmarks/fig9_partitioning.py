@@ -1,5 +1,10 @@
 """Fig 9 + Table 4: communication-aware balanced partitioning (B) vs
-longest-processing-time-first (L): VCPL (normalized to L) and Send counts."""
+longest-processing-time-first (L): VCPL (normalized to L) and Send counts.
+
+Both arms run on the *optimized* IR (``optimize=True``, explicit since
+PR 3): the partitioner ablation isolates the merge strategy, not the
+middle-end, so Table 4 numbers stay comparable across PRs as passes land.
+"""
 from __future__ import annotations
 
 from repro.circuits import build
@@ -16,10 +21,13 @@ def run():
     hw = HardwareConfig(grid_width=15, grid_height=15)
     for nm in NAMES:
         b = build(nm, "full")
-        pb = compile_circuit(b.circuit, hw, strategy="balanced")
-        pl = compile_circuit(b.circuit, hw, strategy="lpt")
+        pb = compile_circuit(b.circuit, hw, strategy="balanced",
+                             optimize=True)
+        pl = compile_circuit(b.circuit, hw, strategy="lpt", optimize=True)
         rows.append({
             "bench": nm,
+            "opt_baseline": True,
+            "instrs_post_opt": pb.stats["instrs_opt"],
             "vcpl_B": pb.vcpl, "vcpl_L": pl.vcpl,
             "vcpl_ratio": pb.vcpl / pl.vcpl,
             "sends_B": pb.stats["sends"], "sends_L": pl.stats["sends"],

@@ -1,0 +1,90 @@
+"""CI smoke: the legacy compile path is frozen; the optimized path matches it.
+
+Two guarantees, cheap enough for every CI run:
+
+  1. **Legacy freeze** — ``compile_circuit(optimize=False)`` on one
+     full-scale circuit must stay *bit-identical* to the committed
+     expectations (``results/expectations/optoff_<circuit>.json``: binary
+     image digests, VCPL, exchange tables, and the IsaSim end state). The
+     legacy path is the fixed cross-PR baseline — if this trips, a change
+     leaked into the pre-middle-end compiler.
+  2. **Differential** — the same circuit compiled with ``optimize=True``
+     must finish at the same cycle with the same exceptions and identical
+     final register values.
+
+Regenerate expectations only when a PR deliberately changes the legacy
+path:  PYTHONPATH=src python -m benchmarks.opt_diff_smoke --update
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+from repro.circuits import FINISH, build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+
+CIRCUIT = "mc"
+HW = HardwareConfig(grid_width=5, grid_height=5)
+EXPECT = (Path(__file__).resolve().parents[1] / "results" / "expectations"
+          / f"optoff_{CIRCUIT}.json")
+
+
+def _digest(prog, sim: IsaSim, n_cycles: int) -> dict:
+    h = hashlib.sha256()
+    for arr in (prog.code, prog.luts, prog.reg_init, prog.spad_init,
+                prog.gmem_init, prog.xchg_src_core, prog.xchg_src_slot,
+                prog.xchg_dst_core, prog.xchg_dst_reg):
+        h.update(arr.tobytes())
+    cycles = sim.run(n_cycles + 10)
+    return {
+        "circuit": CIRCUIT,
+        "grid": [HW.grid_width, HW.grid_height],
+        "binary_sha256": h.hexdigest(),
+        "vcpl": int(prog.vcpl),
+        "t_compute": int(prog.t_compute),
+        "used_cores": int(prog.used_cores),
+        "n_sends": int(prog.n_sends),
+        "cycles": int(cycles),
+        "exceptions": {str(c): int(e) for c, e in sim.exceptions().items()},
+        "regs": {name: int(sim.read_reg(name))
+                 for name in sorted(prog.state_regs)},
+    }
+
+
+def run(update: bool = False) -> None:
+    b = build(CIRCUIT, "full")
+    p_off = compile_circuit(b.circuit, HW, optimize=False)
+    got = _digest(p_off, IsaSim(p_off), b.n_cycles)
+    if update:
+        EXPECT.parent.mkdir(parents=True, exist_ok=True)
+        EXPECT.write_text(json.dumps(got, indent=1))
+        print(f"# wrote {EXPECT}")
+    else:
+        want = json.loads(EXPECT.read_text())
+        diff = {k: (want.get(k), got.get(k))
+                for k in set(want) | set(got) if want.get(k) != got.get(k)}
+        if diff:
+            raise SystemExit(
+                f"optimize=False path diverged from committed expectations "
+                f"({EXPECT.name}): {diff}")
+    # differential: the optimized program reaches the same end state
+    p_opt = compile_circuit(b.circuit, HW, optimize=True)
+    sim = IsaSim(p_opt)
+    assert sim.run(b.n_cycles + 10) == got["cycles"], "finish cycle differs"
+    assert {str(c): int(e) for c, e in sim.exceptions().items()} \
+        == got["exceptions"] == {"0": FINISH}
+    for name, val in got["regs"].items():
+        assert sim.read_reg(name) == val, f"register {name} differs"
+    assert p_opt.stats["instrs_opt"] < p_opt.stats["instrs_lowered"]
+    print(f"# opt_diff_smoke OK: {CIRCUIT} legacy frozen "
+          f"(vcpl={got['vcpl']}), optimized bit-exact "
+          f"(instrs {p_opt.stats['instrs_lowered']}"
+          f"->{p_opt.stats['instrs_opt']}, vcpl={p_opt.vcpl})")
+
+
+if __name__ == "__main__":
+    run(update="--update" in sys.argv[1:])

@@ -14,6 +14,7 @@ import time
 MODULES = [
     "bench_engine",       # engine Vcycles/sec trajectory (jnp/pallas/isasim)
     "bench_batch",        # batched-stimulus aggregate Vcycles/sec vs B
+    "bench_compile",      # middle-end payoff: instrs/VCPL/throughput opt vs off
     "table3_perf",        # Table 3: main performance comparison
     "fig7_scaling",       # Fig 7:  VCPL multicore scaling
     "fig8_global_stall",  # Fig 8:  FIFO/RAM global-stall microbenchmarks

@@ -1,9 +1,13 @@
 """End-to-end compiler: Circuit -> executable Program.
 
-Pipeline (paper Fig. 4): lower -> split/merge partition -> custom-function
-synthesis -> SEND insertion + commit planning -> list scheduling + NoC
-routing -> register allocation -> binary (dense arrays consumed by the
-static-BSP executors in ``core.bsp`` / ``kernels``).
+Pipeline (paper Fig. 4, plus the PR 3 optimizing middle-end — see
+``docs/compiler.md``): lower -> **opt pass pipeline** (``core.opt``:
+constant folding, copy propagation, strength reduction, CSE, DCE) ->
+split/merge partition -> custom-function synthesis -> SEND insertion +
+commit planning -> list scheduling + NoC routing -> register allocation ->
+binary (dense arrays consumed by the static-BSP executors in ``core.bsp``
+/ ``kernels``). ``optimize=False`` skips the middle-end entirely and is
+bit-identical to the legacy path (the fixed cross-PR baseline).
 """
 from __future__ import annotations
 
@@ -14,8 +18,9 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from .isa import HardwareConfig, Instr, NUM_FIELDS, Op, WORD_MASK
-from .lower import InitVal, Lowered, Reloc, lower
+from .lower import InitVal, Lowered, Reloc, def_index, lower
 from .lutsynth import synthesize
+from .opt import optimize_lowered
 from .netlist import Circuit
 from .partition import Partition, SendEdge, partition
 from .regalloc import CoreAlloc, allocate
@@ -190,11 +195,7 @@ def slot_op_masks(code: np.ndarray, used_cores: int) -> np.ndarray:
 
 def _raw_adjacency(instrs: List[Instr]) -> Dict[int, List[int]]:
     """RAW def->use adjacency within one process."""
-    defs: Dict[int, int] = {}
-    for i, ins in enumerate(instrs):
-        w = ins.writes()
-        if w is not None and w != 0:
-            defs[w] = i
+    defs = def_index(instrs)
     adj: Dict[int, List[int]] = {}
     for i, ins in enumerate(instrs):
         for s in ins.srcs:
@@ -220,6 +221,7 @@ def compile_circuit(circuit: Circuit,
                     hw: Optional[HardwareConfig] = None,
                     strategy: str = "balanced",
                     use_luts: bool = True,
+                    optimize: bool = True,
                     timings: Optional[Dict[str, float]] = None) -> Program:
     hw = hw or HardwareConfig()
     tm: Dict[str, float] = {} if timings is None else timings
@@ -228,6 +230,15 @@ def compile_circuit(circuit: Circuit,
     low = lower(circuit)
     tm["lower"] = time.perf_counter() - t0
 
+    # ---- optimizing middle-end (PR 3; optimize=False is the bit-identical
+    # legacy path: the pass pipeline is skipped entirely) ------------------
+    instrs_lowered = len(low.instrs)
+    opt_records: List[Dict] = []
+    if optimize:
+        t0 = time.perf_counter()
+        low, opt_records = optimize_lowered(low)
+        tm["opt"] = time.perf_counter() - t0
+
     t0 = time.perf_counter()
     part = partition(low, hw.num_cores, strategy)
     tm["partition"] = time.perf_counter() - t0
@@ -235,11 +246,8 @@ def compile_circuit(circuit: Circuit,
     assert nproc <= hw.num_cores, (nproc, hw.num_cores)
 
     # protected vregs: values with consumers outside the instruction lists
-    protected: Set[int] = set()
-    for r in low.regs:
-        protected.update(r.nxt)
-    for vs in low.outputs.values():
-        protected.update(vs)
+    # (the same liveness roots the opt passes preserve)
+    protected: Set[int] = low.protected_vregs()
 
     # ---- per-process instruction lists + LUT synthesis -----------------
     t0 = time.perf_counter()
@@ -335,21 +343,27 @@ def compile_circuit(circuit: Circuit,
     core_spad_used = [0] * hw.num_cores
     g_used = 0
     owner_core: Dict[str, int] = {}
+    def place_spad(mname: str, c: int) -> None:
+        owner_core[mname] = c
+        spad_base[mname] = core_spad_used[c]
+        core_spad_used[c] += low.mems[mname].depth * low.mems[mname].stride
+        if core_spad_used[c] > hw.spad_words:
+            raise RuntimeError(
+                f"scratchpad overflow on core {c}: {core_spad_used[c]} "
+                f"words (memory {mname})")
+
     for p, mems in enumerate(part.proc_mems):
         for mname in mems:
-            m = low.mems[mname]
-            c = core_of_proc[p]
-            owner_core[mname] = c
-            spad_base[mname] = core_spad_used[c]
-            core_spad_used[c] += m.depth * m.stride
-            if core_spad_used[c] > hw.spad_words:
-                raise RuntimeError(
-                    f"scratchpad overflow on core {c}: {core_spad_used[c]} "
-                    f"words (memory {mname})")
+            place_spad(mname, core_of_proc[p])
     for mname, m in low.mems.items():
         if m.is_global:
             gmem_base[mname] = g_used
             g_used += m.depth * m.stride
+        elif mname not in spad_base:
+            # every access optimized away (e.g. provably-dead stores): the
+            # memory still gets a placement so its init image and any
+            # relocatable base stay resolvable
+            place_spad(mname, core_of_proc[part.priv_proc])
 
     def resolve(v: InitVal) -> int:
         if isinstance(v, int):
@@ -470,6 +484,10 @@ def compile_circuit(circuit: Circuit,
                  False))
         for mname, m in low.mems.items()}
     stats.update({
+        "optimize": bool(optimize),
+        "instrs_lowered": instrs_lowered,
+        "instrs_opt": len(low.instrs),
+        "opt_passes": opt_records,
         "commit_movs": commit_movs,
         "shared_commits": shared_commits,
         "global_ops": global_ops,

@@ -73,6 +73,26 @@ LOGIC_OPS = frozenset({Op.AND, Op.OR, Op.XOR, Op.NOT})
 NO_RESULT_OPS = frozenset({Op.NOP, Op.ST, Op.GST, Op.EXPECT})
 # SEND "result" is defined as the forwarded value (the engine traces it).
 
+# Opcodes with observable effects beyond their register result — never
+# eliminated, reordered across same-memory ops, or value-numbered.
+SIDE_EFFECT_OPS = frozenset({Op.ST, Op.GST, Op.EXPECT, Op.SEND})
+# Memory reads: not pure (result depends on memory state), but full-cycle
+# semantics order every load of a memory before its first store, so two
+# loads of the same (memory, address) within one Vcycle are equivalent.
+MEM_READ_OPS = frozenset({Op.LD, Op.GLD})
+# Register-to-register opcodes whose result is a pure function of operands
+# and imm — foldable, substitutable and value-numberable by core.opt.
+PURE_OPS = frozenset({
+    Op.MOV, Op.MOVI, Op.ADD, Op.ADDC, Op.CARRY, Op.SUB, Op.SUBB, Op.BORROW,
+    Op.MUL, Op.MULH, Op.AND, Op.OR, Op.XOR, Op.NOT, Op.MUX, Op.SEQ, Op.SNE,
+    Op.SLTU, Op.SLL, Op.SRL, Op.SRA, Op.SLLV, Op.SRLV, Op.SLICE,
+})
+# Pure ops where the first two operands commute (canonicalized by GVN).
+COMMUTATIVE_OPS = frozenset({
+    Op.ADD, Op.ADDC, Op.CARRY, Op.MUL, Op.MULH, Op.AND, Op.OR, Op.XOR,
+    Op.SEQ, Op.SNE,
+})
+
 NUM_FIELDS = 7  # (op, dst, s1, s2, s3, s4, imm)
 
 

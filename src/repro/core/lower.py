@@ -27,6 +27,25 @@ def nwords(width: int) -> int:
     return (width + WORD_BITS - 1) // WORD_BITS
 
 
+def def_index(instrs: Sequence[Instr]) -> Dict[int, int]:
+    """vreg -> index of its (unique, SSA) defining instruction."""
+    out: Dict[int, int] = {}
+    for i, ins in enumerate(instrs):
+        w = ins.writes()
+        if w is not None and w != 0:
+            out[w] = i
+    return out
+
+
+def use_index(instrs: Sequence[Instr]) -> Dict[int, List[int]]:
+    """vreg -> indices of instructions reading it (def-use chains)."""
+    out: Dict[int, List[int]] = {}
+    for i, ins in enumerate(instrs):
+        for s in ins.srcs:
+            out.setdefault(s, []).append(i)
+    return out
+
+
 @dataclass(frozen=True)
 class Reloc:
     """Relocatable constant: memory base address, resolved at placement."""
@@ -60,7 +79,24 @@ class MemLayout:
 
 @dataclass
 class Lowered:
-    """Monolithic lower-assembly process (pre-partitioning)."""
+    """Monolithic lower-assembly process (pre-partitioning).
+
+    Since PR 3 this is a proper pass-friendly SSA IR: virtual registers are
+    defined at most once, every definition precedes its uses (the list is
+    topologically ordered), and the helpers below expose def-use chains,
+    liveness roots and an invariant checker so optimization passes
+    (``core.opt``) can rewrite the instruction stream safely.
+
+    Liveness contract (the batched-stimulus roots, see ``docs/compiler.md``):
+
+      * every next-register vreg (``regs[*].nxt``) keeps a *unique* defining
+        instruction — it is a partitioning sink and commit source;
+      * current-register vregs (``regs[*].cur``), including ``Planes`` init
+        carriers, and :class:`Reloc` leaves are opaque state — they are never
+        in ``const_vregs`` and must never be folded as constants (their value
+        is patched per stimulus / at placement);
+      * output vregs keep their defining instructions.
+    """
     name: str
     instrs: List[Instr]
     vreg_init: Dict[int, InitVal]          # leaf vregs (consts/inputs/state)
@@ -78,6 +114,143 @@ class Lowered:
             per_op[i.op.name] = per_op.get(i.op.name, 0) + 1
         return {"instrs": len(self.instrs), "vregs": self.num_vregs,
                 "regs": len(self.regs), **per_op}
+
+    # ---- pass-support helpers (PR 3) ---------------------------------
+    def defs(self) -> Dict[int, int]:
+        return def_index(self.instrs)
+
+    def uses(self) -> Dict[int, List[int]]:
+        return use_index(self.instrs)
+
+    def protected_vregs(self) -> set:
+        """Vregs with consumers outside the instruction list: next-register
+        words (commit sources / SEND payloads) and host-visible outputs.
+        Their defining instructions must survive every pass and must keep
+        their ``dst``."""
+        out = set()
+        for r in self.regs:
+            out.update(r.nxt)
+        for vs in self.outputs.values():
+            out.update(vs)
+        return out
+
+    def state_vregs(self) -> set:
+        """Current-register leaves (incl. batched init-plane carriers)."""
+        out = set()
+        for r in self.regs:
+            out.update(r.cur)
+        return out
+
+    def cur_word_masks(self) -> Dict[int, int]:
+        """Per current-register-word mask of bits that can ever be set.
+
+        Word ``j`` of a ``W``-bit register holds at most ``min(16, W-16j)``
+        bits: inits are masked by the netlist builders (``Circuit.reg`` /
+        ``circuits.common.Planes``) and every lowered next-value is masked
+        via ``_mask_top``. The known-bits pass in ``core.opt`` leans on
+        this to erase redundant top-word masking."""
+        masks: Dict[int, int] = {}
+        for r in self.regs:
+            for j, cw in enumerate(r.cur):
+                bits = min(WORD_BITS, r.width - WORD_BITS * j)
+                masks[cw] = (1 << max(bits, 0)) - 1
+        return masks
+
+    def replace_instrs(self, instrs: List[Instr]) -> None:
+        """Install a rewritten instruction list (passes call this so future
+        bookkeeping has a single choke point)."""
+        self.instrs = instrs
+
+    def compact(self) -> Dict[int, int]:
+        """Renumber vregs densely (0 stays 0), dropping leaf-init entries no
+        longer referenced by instructions, register state or outputs.
+        Returns the old->new mapping applied."""
+        live: set = {0}
+        for ins in self.instrs:
+            live.update(ins.srcs)
+            w = ins.writes()
+            if w is not None:
+                live.add(w)
+        for r in self.regs:
+            live.update(r.cur)
+            live.update(r.nxt)
+        for vs in self.outputs.values():
+            live.update(vs)
+        remap = {v: i for i, v in enumerate(sorted(live))}
+
+        def m(v: int) -> int:
+            return remap[v]
+
+        self.instrs = [
+            Instr(ins.op, m(ins.dst) if ins.writes() is not None else 0,
+                  tuple(m(s) for s in ins.srcs), ins.imm, mem=ins.mem)
+            for ins in self.instrs]
+        self.vreg_init = {m(v): iv for v, iv in self.vreg_init.items()
+                          if v in remap}
+        self.const_vregs = {m(v): c for v, c in self.const_vregs.items()
+                            if v in remap}
+        self.regs = [RegWords(r.name, r.width, tuple(m(v) for v in r.cur),
+                              tuple(m(v) for v in r.nxt), r.init)
+                     for r in self.regs]
+        self.outputs = {k: [m(v) for v in vs]
+                        for k, vs in self.outputs.items()}
+        self.num_vregs = len(remap)
+        return remap
+
+    def check(self) -> None:
+        """Invariant checker: SSA well-formedness plus the batched-stimulus
+        liveness contract. Raises AssertionError on violation."""
+        defined: Dict[int, int] = {}
+        for i, ins in enumerate(self.instrs):
+            w = ins.writes()
+            assert w != 0, \
+                f"instr {i} writes the architectural zero register v0"
+            if w is not None:
+                assert w not in defined, \
+                    f"vreg v{w} defined twice (instrs {defined[w]} and {i})"
+                assert w not in self.vreg_init, \
+                    f"leaf vreg v{w} redefined by instr {i}"
+                assert 0 < w < self.num_vregs, (i, w)
+                defined[w] = i
+            for s in ins.srcs:
+                assert 0 <= s < self.num_vregs, (i, s)
+                if s != 0 and s not in self.vreg_init:
+                    assert s in defined and defined[s] < i, \
+                        f"instr {i} reads v{s} before its definition"
+            if ins.op in (Op.LD, Op.ST, Op.GLD, Op.GST):
+                assert ins.mem in self.mems, (i, ins.mem)
+        # constants are true constants: int inits matching const_vregs,
+        # never register state, never relocatable addresses
+        state = self.state_vregs()
+        for v, c in self.const_vregs.items():
+            if v == 0:
+                assert c == 0
+                continue
+            iv = self.vreg_init.get(v)
+            assert isinstance(iv, int) and iv == c, \
+                f"const vreg v{v} init {iv!r} != folded value {c}"
+            assert v not in state, f"state vreg v{v} marked constant"
+        for v, iv in self.vreg_init.items():
+            if isinstance(iv, Reloc):
+                assert v not in self.const_vregs, \
+                    f"relocatable leaf v{v} marked constant"
+        # batched-stimulus roots: every register word keeps its state leaf
+        # and a unique next-value definition
+        seen_nxt: set = set()
+        for r in self.regs:
+            assert len(r.cur) == len(r.nxt) == nwords(r.width), r.name
+            for cw in r.cur:
+                assert cw in self.vreg_init, \
+                    f"state leaf v{cw} of {r.name} lost its init"
+            for nw in r.nxt:
+                assert nw in defined, \
+                    f"next-register v{nw} of {r.name} has no definition"
+                assert nw not in seen_nxt, \
+                    f"next-register v{nw} of {r.name} shared between words"
+                seen_nxt.add(nw)
+        for name, vs in self.outputs.items():
+            for v in vs:
+                assert v in defined, f"output {name!r} vreg v{v} undefined"
 
 
 class Lowerer:

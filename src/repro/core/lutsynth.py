@@ -24,7 +24,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from .isa import Instr, LOGIC_OPS, NUM_LUTS, Op, WORD_MASK
-from .lower import Lowered
+from .lower import Lowered, def_index, use_index
 
 # per-lane truth tables for the 4 cut variables: table bit p = value of
 # variable i under input pattern p (p encodes (v3,v2,v1,v0))
@@ -116,18 +116,17 @@ def synthesize(instrs: List[Instr], vreg_init: Dict[int, object],
     consumers outside the instruction list and must survive as explicit defs
     — they may be LUT roots but never fused-away interiors.
 
+    Since PR 3 the input is the post-opt IR: copy propagation has collapsed
+    MOV chains between logic ops (a MOV is not in ``LOGIC_OPS``, so it used
+    to sever a logic component in two), which exposes larger fanout-free
+    cones to the cut enumeration, and ``vreg_init`` may contain constants
+    the middle-end materialized — both fold into tables for free.
+
     Returns (new instruction list, LUT tables used by this process).
     """
-    defs: Dict[int, int] = {}
-    for i, ins in enumerate(instrs):
-        w = ins.writes()
-        if w is not None:
-            defs[w] = i
+    defs: Dict[int, int] = def_index(instrs)
     const_of = dict(vreg_init)  # caller passes *true constants only*
-    uses: Dict[int, List[int]] = {}
-    for i, ins in enumerate(instrs):
-        for s in ins.srcs:
-            uses.setdefault(s, []).append(i)
+    uses: Dict[int, List[int]] = use_index(instrs)
 
     # ---- cut enumeration over logic nodes -----------------------------
     # a cut is a frozenset of *variable* vregs (constants are free)

@@ -20,6 +20,14 @@ Cross-process dataflow is *exclusively* register (state) values: the producer
 of a next-register value SENDs it to every remote process that reads the
 register's current value, and delivery happens at the Vcycle boundary — the
 static-BSP exchange.
+
+Since PR 3 the input is the *optimized* IR (``core.opt`` runs between lower
+and partition): cones are smaller, copy-propagation has collapsed MOV chains
+(exposing larger fanout-free logic components to ``core.lutsynth``), and the
+merge cost model — instructions + Sends — therefore prices the instructions
+that will actually be scheduled. The split relies on the IR's liveness
+contract: every next-register word keeps a unique defining instruction
+(``Lowered.check``), so every register word is a sink here.
 """
 from __future__ import annotations
 
@@ -72,15 +80,9 @@ class Partition:
 class _Splitter:
     def __init__(self, low: Lowered):
         self.low = low
-        self.defs: Dict[int, int] = {}
-        for idx, ins in enumerate(low.instrs):
-            w = ins.writes()
-            if w is not None:
-                self.defs[w] = idx
+        self.defs: Dict[int, int] = low.defs()
         # state leaves = current-register vregs
-        self.cur_vregs: Set[int] = set()
-        for r in low.regs:
-            self.cur_vregs.update(r.cur)
+        self.cur_vregs: Set[int] = low.state_vregs()
 
     def cone(self, sink: int) -> Tuple[FrozenSet[int], FrozenSet[int]]:
         """Backward closure from instr ``sink``. Returns (instr ids, state

@@ -117,6 +117,20 @@ def schedule(core_instrs: List[List[Instr]],
             pv[i] = best
         prio.append(pv)
 
+    # lower bound on t_compute: the longest latency path through any
+    # process's dependence graph, and each core's instruction load. A
+    # schedule hitting this bound is provably minimal *for this partition*
+    # (the middle-end's job is to shrink the bound itself — fewer, simpler
+    # instructions per cone; see core.opt).
+    core_load: Dict[int, int] = {}
+    crit_lb = 0
+    for p, instrs in enumerate(core_instrs):
+        c = core_of_proc[p]
+        core_load[c] = core_load.get(c, 0) + len(instrs)
+        if instrs:
+            crit_lb = max(crit_lb, max(prio[p]) + 1)
+    crit_path_lb = max([crit_lb] + list(core_load.values()))
+
     # scheduling state
     n_sched: List[int] = [0] * len(core_instrs)
     sched_slot: List[List[int]] = [[-1] * len(ci) for ci in core_instrs]
@@ -210,6 +224,8 @@ def schedule(core_instrs: List[List[Instr]],
         "nops": nops,
         "sends": sends_n,
         "instrs": total,
+        "crit_path_lb": crit_path_lb,
+        "sched_minimal": t_compute == crit_path_lb,
         "imem_overflow": max(0, vcpl - hw.imem_slots),
     })
     return res

@@ -123,6 +123,52 @@ def test_compiled_program_matches_oracle(circuit, grid, strategy, use_luts):
                     f"luts={use_luts}")
 
 
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(random_circuit(), st.booleans())
+def test_optimized_compile_matches_legacy_and_oracle(circuit, use_luts):
+    """PR 3 property: the optimizing middle-end preserves semantics. A
+    random circuit compiled with ``optimize=True`` and ``optimize=False``
+    stays bit-exact against the netlist oracle *and* against itself on
+    every register over a multi-Vcycle run, and optimization never adds
+    instructions or loses a state register."""
+    hw = HardwareConfig(grid_width=3, grid_height=3)
+    po = compile_circuit(circuit, hw, use_luts=use_luts, optimize=True)
+    pf = compile_circuit(circuit, hw, use_luts=use_luts, optimize=False)
+    assert set(po.state_regs) == set(pf.state_regs)
+    assert po.stats["instrs_opt"] <= po.stats["instrs_lowered"]
+    oracle = NetlistSim(circuit)
+    so, sf = IsaSim(po), IsaSim(pf)
+    for cyc in range(8):
+        oracle.step()
+        so.step()
+        sf.step()
+        for name in circuit.reg_names.values():
+            if name in po.state_regs:
+                want = oracle.reg_value(name)
+                assert so.read_reg(name) == want, (cyc, name, "opt")
+                assert sf.read_reg(name) == want, (cyc, name, "legacy")
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(random_circuit())
+def test_opt_pipeline_ir_invariants(circuit):
+    """The pass pipeline keeps the IR well-formed (``Lowered.check``) and
+    respects the liveness contract on every random circuit."""
+    from repro.core.lower import lower
+    from repro.core.opt import optimize_lowered
+
+    low = lower(circuit)
+    n_regs = len(low.regs)
+    low, records = optimize_lowered(low)   # runs check() before and after
+    assert len(low.regs) == n_regs         # state registers never eliminated
+    assert records
+    assert all(r["instrs_after"] <= r["instrs_before"] for r in records), \
+        "no pass may add instructions"
+
+
 @settings(max_examples=25, deadline=None,
           suppress_health_check=[HealthCheck.too_slow])
 @given(random_circuit())
