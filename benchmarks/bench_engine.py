@@ -25,16 +25,17 @@ import jax
 import numpy as np
 
 from benchmarks.common import best_time, row_csv, run_rows
-from repro.circuits import CIRCUITS, build
-from repro.core.bsp import Machine
-from repro.core.compile import compile_circuit
-from repro.core.isa import HardwareConfig
+import repro.sim as sim
+from repro.circuits import CIRCUITS
+from repro.core import HardwareConfig
 
 HW = HardwareConfig(grid_width=5, grid_height=5)
 REPS = 3
 
 
-def _rate_machine(m: Machine, n: int, reps: int = REPS) -> float:
+def _rate_machine(m, n: int, reps: int = REPS) -> float:
+    """Vcycles/sec of a raw core.bsp.Machine (timed without the facade's
+    RunResult probe sweep, keeping rows comparable across PRs)."""
     def once():
         jax.block_until_ready(m.run(m.init_state(), n).regs)
     return n / best_time(once, reps)
@@ -52,10 +53,10 @@ def _rate_isasim(prog, n: int, reps: int = REPS) -> float:
 
 
 def bench_circuit(nm: str, scale: str = "full", reps: int = REPS) -> dict:
-    b = build(nm, scale)
     # LUT-free compile: the specialization headline the paper-style
     # engines target (no 16-pattern loop anywhere in the schedule)
-    prog = compile_circuit(b.circuit, HW, use_luts=False)
+    s = sim.compile(nm, HW, scale=scale, use_luts=False)
+    b, prog = s.bench, s.program
     # stay below the FINISH cycle; cap the cycle count so the slow seed
     # arm keeps the whole sweep in seconds
     n = min(max(8, b.n_cycles - 2), 128)
@@ -70,15 +71,15 @@ def bench_circuit(nm: str, scale: str = "full", reps: int = REPS) -> dict:
         "lut_free": True,
         "vcycles": n,
     }
-    new = Machine(prog)
+    new = s.engine("machine").m
     row["jnp_vcycles_per_s"] = _rate_machine(new, n, reps)
-    seed = Machine(prog, specialize=False)
+    seed = s.engine("seed").m
     row["seed_vcycles_per_s"] = _rate_machine(seed, n, reps)
     row["speedup_vs_seed"] = (row["jnp_vcycles_per_s"]
                               / row["seed_vcycles_per_s"])
     row["isasim_vcycles_per_s"] = _rate_isasim(prog, n, reps)
     if not prog.has_global:
-        pal = Machine(prog, backend="pallas", interpret=True)
+        pal = s.engine("pallas", interpret=True).m
         row["pallas_interpret_vcycles_per_s"] = _rate_machine(pal, n, reps)
     else:
         row["pallas_interpret_vcycles_per_s"] = None

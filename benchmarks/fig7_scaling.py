@@ -5,8 +5,7 @@ compiler, since the compiler can accurately count cycles"."""
 from __future__ import annotations
 
 from repro.circuits import build
-from repro.core.compile import compile_circuit
-from repro.core.isa import HardwareConfig
+from repro.core import HardwareConfig
 
 from .common import emit, row_csv
 
@@ -24,7 +23,7 @@ def run():
                                 spad_words=1 << 17 if w == 1 else 16384,
                                 num_regs=1 << 14 if w == 1 else 2048,
                                 imem_slots=1 << 20 if w == 1 else 4096)
-            prog = compile_circuit(b.circuit, hw)
+            prog = b.compile(hw).program
             if base is None:
                 base = prog.vcpl
             rows.append({"bench": nm, "cores": w * h, "vcpl": prog.vcpl,

@@ -4,9 +4,7 @@ no CPU analogue; the engine-side equivalent is executor throughput
 from __future__ import annotations
 
 from repro.circuits import build
-from repro.core.bsp import Machine
-from repro.core.compile import compile_circuit
-from repro.core.isa import HardwareConfig
+from repro.core import HardwareConfig
 
 from .common import emit, row_csv, timeit
 
@@ -17,9 +15,9 @@ def run():
     rows = []
     b = build("cgra", "full")
     for (w, h) in GRIDS:
-        prog = compile_circuit(b.circuit,
-                               HardwareConfig(grid_width=w, grid_height=h))
-        m = Machine(prog)
+        s = b.compile(HardwareConfig(grid_width=w, grid_height=h))
+        prog = s.program
+        m = s.engine("machine").m
         n = 64
 
         def go():

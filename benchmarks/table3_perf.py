@@ -21,10 +21,9 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro.sim as sim
 from repro.circuits import build
-from repro.core.bsp import Machine
-from repro.core.compile import compile_circuit
-from repro.core.isa import HardwareConfig
+from repro.core import HardwareConfig
 
 from .common import MANTICORE_CLOCK_HZ, emit, row_csv, timeit
 
@@ -43,12 +42,13 @@ def run(cycles: int = CYCLES):
     hw = HardwareConfig(grid_width=15, grid_height=15)
     for nm in NAMES:
         b = build(nm, "full")
-        prog_p = compile_circuit(b.circuit, hw)
-        prog_s = compile_circuit(b.circuit, serial_hw())
+        sim_p = b.compile(hw)
+        sim_s = b.compile(serial_hw())
+        prog_p, prog_s = sim_p.program, sim_s.program
         n = min(cycles, b.n_cycles - 2)
 
-        mp = Machine(prog_p)
-        ms = Machine(prog_s)
+        mp = sim_p.engine("machine").m
+        ms = sim_s.engine("machine").m
 
         def run_p():
             st = mp.run(mp.init_state(), n)

@@ -1,13 +1,15 @@
-"""Quickstart: build a circuit with the DSL, compile it with the static-BSP
-compiler, and simulate it on the lockstep engine — all public API.
+"""Quickstart: build a circuit with the DSL, then compile *and* simulate it
+through the unified ``repro.sim`` front door — one facade call per step,
+with the netlist oracle, the lockstep engine and the persistent Program
+artifact all behind the same API (see ``docs/api.md``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core.netlist import Circuit
-from repro.core.interpreter import NetlistSim
-from repro.core.isa import HardwareConfig
-from repro.core.compile import compile_circuit
-from repro.core.bsp import Machine
+import tempfile
+from pathlib import Path
+
+import repro.sim as sim
+from repro.core import Circuit, HardwareConfig
 
 # --- 1. describe hardware: a 24-bit counter driving a blinking LED pattern
 c = Circuit("blinky")
@@ -19,22 +21,29 @@ c.set_next(led, c.mux(cnt[3:0].eq(0), rot, led))
 c.output("led", led)
 c.finish_when(cnt.eq(1000), eid=1)          # $finish after 1000 cycles
 
-# --- 2. reference simulation (the oracle)
-sim = NetlistSim(c)
-cycles, _ = sim.run(2000)
-print(f"oracle finished at cycle {cycles}, led={sim.reg_value('led'):#04x}")
-
-# --- 3. compile for a Manticore grid (static BSP: split -> merge -> LUT
-#        fusion -> list schedule -> collision-free NoC routes)
-prog = compile_circuit(c, HardwareConfig(grid_width=4, grid_height=4))
+# --- 2. compile for a Manticore grid (static BSP: lower -> opt -> split ->
+#        merge -> LUT fusion -> list schedule -> collision-free NoC routes)
+s = sim.compile(c, HardwareConfig(grid_width=4, grid_height=4))
+prog = s.program
 print(f"compiled: {prog.used_cores} cores, VCPL={prog.vcpl} "
       f"(machine cycles per simulated RTL cycle)")
 print(f"predicted hardware rate at 475 MHz: {475e6 / prog.vcpl / 1e3:.0f} kHz")
 
-# --- 4. execute on the vectorized lockstep engine (JAX)
-m = Machine(prog)
-st = m.run(m.init_state(), 2000)
-assert m.perf(st)["vcycles"] == cycles
-assert m.read_reg(st, "led") == sim.reg_value("led")
-print(f"engine matches oracle: led={m.read_reg(st, 'led'):#04x}, "
-      f"exceptions={m.exceptions(st)}")
+# --- 3. reference simulation (the netlist oracle, same Engine protocol)
+ref = s.run(2000, engine="oracle")
+print(f"oracle finished at cycle {ref.cycles}, led={ref.registers['led']:#04x}")
+
+# --- 4. execute on the vectorized lockstep engine (JAX) — same RunResult
+res = s.run(2000)
+assert res.cycles == ref.cycles
+assert res.registers["led"] == ref.registers["led"]
+print(f"engine matches oracle: led={res.registers['led']:#04x}, "
+      f"exceptions={res.exceptions}")
+
+# --- 5. the compiled Program is a persistent artifact: save, reload, rerun
+with tempfile.TemporaryDirectory() as td:
+    path = Path(td) / "blinky.npz"
+    s.save(path)
+    res2 = sim.load(path).run(2000)
+    assert res2.registers == res.registers
+    print(f"artifact round-trip OK ({path.stat().st_size} bytes on disk)")

@@ -1,40 +1,53 @@
 """Scenario: simulate the rv32r benchmark (a ring of 16 tiny processors) on
-the full static-BSP stack, with an elastic mid-run grid migration — the
-fault-tolerance path a long simulation would take if its machine allocation
-changed.
+the full static-BSP stack via the ``repro.sim`` facade, with an elastic
+mid-run grid migration — the fault-tolerance path a long simulation would
+take if its machine allocation changed. Both grids compile through an
+on-disk compile cache (scoped to this run; point ``cache=`` at a fixed
+directory — or pass ``cache=True`` for ``~/.cache/repro-sim`` — to skip
+the middle-end across runs too), and the final recompile demonstrates the
+warm path: a pure artifact load, ``Simulation.cache_hit``.
 
     PYTHONPATH=src python examples/simulate_accelerator.py
 """
-import numpy as np
+import tempfile
 
-from repro.circuits import build, FINISH
-from repro.core.bsp import Machine
-from repro.core.compile import compile_circuit
-from repro.core.isa import HardwareConfig
+import repro.sim as sim
+from repro.core import HardwareConfig
 from repro.runtime import elastic
 
-bench = build("rv32r", "full")
-print(f"benchmark: rv32r ring, finishes at cycle {bench.n_cycles}")
+bench_name = "rv32r"
+_cache_tmp = tempfile.TemporaryDirectory(prefix="repro-sim-cache-")
+cache_dir = _cache_tmp.name
 
 # compile for a small grid, run half way
-hw_small = HardwareConfig(grid_width=5, grid_height=5)
-prog_a = compile_circuit(bench.circuit, hw_small)
-print(f"5x5 grid: {prog_a.used_cores} cores used, VCPL={prog_a.vcpl}")
-ma = Machine(prog_a)
-half = bench.n_cycles // 2
-st = ma.run(ma.init_state(), half)
-print(f"ran {ma.perf(st)['vcycles']} cycles on the 5x5 grid")
+sa = sim.compile(bench_name, HardwareConfig(grid_width=5, grid_height=5),
+                 cache=cache_dir)
+print(f"benchmark: rv32r ring, finishes at cycle {sa.n_cycles}")
+print(f"5x5 grid: {sa.program.used_cores} cores used, "
+      f"VCPL={sa.program.vcpl} (cache_hit={sa.cache_hit})")
+ea = sa.engine()
+half = sa.n_cycles // 2
+ra = ea.run(half)
+print(f"ran {ra.cycles} cycles on the 5x5 grid")
 
 # "the job got a bigger allocation": recompile for 15x15 and migrate the
 # architectural state (registers + memories) by name
-hw_big = HardwareConfig(grid_width=15, grid_height=15)
-prog_b = compile_circuit(bench.circuit, hw_big)
-print(f"15x15 grid: {prog_b.used_cores} cores used, VCPL={prog_b.vcpl} "
-      f"({prog_a.vcpl / prog_b.vcpl:.2f}x fewer machine cycles per Vcycle)")
-mb = Machine(prog_b)
-st_b = elastic.migrate(prog_a, st, prog_b, mb)
-st_b = mb.run(st_b, bench.n_cycles)
-total = int(np.asarray(st_b.counters)[0]) + half
-assert set(mb.exceptions(st_b).values()) == {FINISH}
+sb = sim.compile(bench_name, HardwareConfig(grid_width=15, grid_height=15),
+                 cache=cache_dir)
+print(f"15x15 grid: {sb.program.used_cores} cores used, "
+      f"VCPL={sb.program.vcpl} "
+      f"({sa.program.vcpl / sb.program.vcpl:.2f}x fewer machine cycles "
+      f"per Vcycle)")
+eb = sb.engine()
+eb.state = elastic.migrate(sa.program, ea.state, sb.program, eb.m)
+rb = eb.run(sb.n_cycles)
+total = rb.cycles + half
+assert rb.finished, rb.exceptions
 print(f"migrated run finished cleanly at cycle {total} "
-      f"(expected {bench.n_cycles}) — state carried over exactly")
+      f"(expected {sb.n_cycles}) — state carried over exactly")
+
+# a second compile of either grid is a pure cache hit (middle-end skipped)
+sc = sim.compile(bench_name, HardwareConfig(grid_width=15, grid_height=15),
+                 cache=cache_dir)
+assert sc.cache_hit
+print(f"warm recompile: cache_hit={sc.cache_hit}")

@@ -57,12 +57,24 @@ SMALL_PARAMS: Dict[str, Dict] = {
 }
 
 
+SCALES = ("full", "small")
+
+
 def build(name: str, scale: str = "full", seeds=None, **overrides) -> Bench:
     """Build one benchmark. ``seeds=[s0, s1, ...]`` requests a *batched*
     bench: one structural netlist (that of ``s0``) plus per-seed init
     planes (``bench.reg_planes``/``bench.mem_planes``) so a single compiled
-    Program can simulate every stimulus at once (``core.bsp.BatchedMachine``).
+    Program can simulate every stimulus at once (``core.bsp.BatchedMachine``
+    — or, one level up, ``repro.sim.compile(name, seeds=[...])``).
     """
+    if name not in CIRCUITS:
+        raise KeyError(
+            f"unknown circuit {name!r}: available circuits are "
+            f"{', '.join(sorted(CIRCUITS))} (scales: {', '.join(SCALES)})")
+    if scale not in SCALES:
+        raise KeyError(
+            f"unknown scale {scale!r} for circuit {name!r}: valid scales "
+            f"are {', '.join(SCALES)}")
     params = dict(FULL_PARAMS[name] if scale == "full"
                   else SMALL_PARAMS[name])
     params.update(overrides)

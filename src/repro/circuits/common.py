@@ -131,6 +131,15 @@ class Bench:
         return [program.init_images(r, m)
                 for r, m in zip(self.reg_planes, self.mem_planes)]
 
+    def compile(self, hw=None, **options) -> "Simulation":  # noqa: F821
+        """Compile this bench through the :mod:`repro.sim` facade — the
+        returned Simulation knows the cycle budget and the seed planes, so
+        ``bench.compile(hw).run()`` is the whole simulate-and-check flow.
+        Options (``optimize=``, ``use_luts=``, ``cache=``, ...) are those
+        of :func:`repro.sim.compile`."""
+        from ..sim import facade
+        return facade.compile(self, hw, **options)
+
 
 def rng(seed: int) -> random.Random:
     return random.Random(seed)

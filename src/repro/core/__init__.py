@@ -1,3 +1,14 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core static-BSP stack: netlist IR, compiler pipeline and executors.
+
+These modules are the implementation layer; the recommended entry point is
+the :mod:`repro.sim` facade (``sim.compile(...)`` / ``Simulation``), which
+wraps them behind one API. Everything here stays importable directly —
+``repro.core.compile.compile_circuit``, ``repro.core.bsp.Machine`` etc.
+are stable — and the most common names are re-exported below for
+convenience.
+"""
+from .compile import Program, compile_circuit
+from .isa import HardwareConfig, Op
+from .netlist import Circuit
+
+__all__ = ["Program", "compile_circuit", "HardwareConfig", "Op", "Circuit"]

@@ -134,6 +134,20 @@ class Program:
                 spad_init[core, base:base + w.shape[0]] = w
         return reg_init, spad_init, gmem_init
 
+    def save(self, path):
+        """Persist this compiled Program as a single versioned ``.npz``
+        artifact (see :mod:`repro.sim.artifact`). ``Program.load(path)``
+        restores it bit-exactly — arrays, exchange tables,
+        ``outputs``/``state_regs`` maps and ``stats`` — so the middle-end
+        cost is paid once per design, not once per process."""
+        from ..sim.artifact import save_program
+        return save_program(self, path)
+
+    @staticmethod
+    def load(path) -> "Program":
+        from ..sim.artifact import load_program
+        return load_program(path)
+
     def send_capture(self, C: int) -> np.ndarray:
         """[T, C] int32 capture-index table: entry (t, c) is the flat SEND
         index whose value is produced at slot t on core c, or ``n_sends``

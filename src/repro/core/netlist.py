@@ -305,3 +305,33 @@ class Circuit:
         for n in self.nodes:
             if n.op == NOp.MEMRD or n.op == NOp.MEMWR:
                 assert n.params["mem"] in self.mems
+
+    def fingerprint(self) -> str:
+        """Structural SHA-256 of the netlist — the identity the
+        ``repro.sim`` compile cache keys on. Covers everything that can
+        change simulation semantics or the compiled binary: every node
+        (op, args, width, params), every memory (shape + init image +
+        placement class), the register init/next/name maps and the latched
+        input values. Two independent builds of the same design hash
+        equal; any semantic difference does not.
+        """
+        import hashlib
+        h = hashlib.sha256()
+
+        def feed(*parts) -> None:
+            for p in parts:
+                h.update(repr(p).encode("utf-8"))
+                h.update(b"\x00")
+
+        feed("circuit", self.name, len(self.nodes))
+        for n in self.nodes:
+            feed(n.nid, n.op.value, n.args, n.width,
+                 sorted(n.params.items()))
+        for name in sorted(self.mems):
+            m = self.mems[name]
+            feed("mem", name, m.depth, m.width, tuple(m.init), m.is_global)
+        feed("reg_next", sorted(self.reg_next.items()))
+        feed("reg_init", sorted(self.reg_init.items()))
+        feed("reg_names", sorted(self.reg_names.items()))
+        feed("inputs", sorted(self.input_values.items()))
+        return h.hexdigest()

@@ -1,0 +1,40 @@
+"""``repro.sim`` — the unified simulation front-end.
+
+One import gives the whole workflow::
+
+    import repro.sim as sim
+
+    s = sim.compile("rv32r", scale="small", cache=True)   # or a Circuit/Bench
+    result = s.run()                   # RunResult: cycles/exceptions/probes
+    s.save("rv32r.npz")                # persistent compiled artifact
+    s2 = sim.load("rv32r.npz")         # ...reloaded without recompiling
+
+Layers (each importable on its own):
+
+- :mod:`repro.sim.result` — :class:`RunResult`, the uniform return shape.
+- :mod:`repro.sim.engine` — the :class:`Engine` protocol and adapters over
+  all five executors (``Machine``, ``BatchedMachine``, ``GridMachine``,
+  ``IsaSim``, ``NetlistSim``).
+- :mod:`repro.sim.artifact` — versioned ``.npz`` Program serialization
+  (``Program.save``/``Program.load`` delegate here).
+- :mod:`repro.sim.cache` — the fingerprint-keyed on-disk compile cache.
+- :mod:`repro.sim.facade` — :func:`compile`, :func:`load` and
+  :class:`Simulation` tying it together.
+
+``repro.core.*`` remains importable unchanged — this package is a facade
+over those modules, not a replacement. See ``docs/api.md``.
+"""
+from .artifact import FORMAT_VERSION, load_program, save_program
+from .cache import CompileCache, cache_key, default_cache_dir
+from .engine import (BatchedEngine, Engine, GridEngine, IsaEngine,
+                     MachineEngine, OracleEngine)
+from .facade import CYCLE_SLACK, Simulation, compile, load
+from .result import FINISH, MISMATCH, RunResult
+
+__all__ = [
+    "compile", "load", "Simulation", "RunResult", "Engine",
+    "MachineEngine", "BatchedEngine", "GridEngine", "IsaEngine",
+    "OracleEngine", "save_program", "load_program", "FORMAT_VERSION",
+    "CompileCache", "cache_key", "default_cache_dir",
+    "FINISH", "MISMATCH", "CYCLE_SLACK",
+]

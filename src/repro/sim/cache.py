@@ -1,0 +1,101 @@
+"""On-disk compile cache: fingerprint the request, reuse the artifact.
+
+Compilation is the expensive half of the Manticore bargain (lower → opt →
+partition → lutsynth → schedule → regalloc); simulation of the resulting
+static binary is the cheap half. A production service replaying the same
+designs across many scenarios should pay compilation once *per design per
+configuration* — across processes, not just within one.
+
+The cache key is a SHA-256 over:
+
+* the **circuit fingerprint** (:meth:`repro.core.netlist.Circuit.fingerprint`
+  — a structural hash of nodes, memories, register init/next maps and
+  latched input values; two builds of the same design collide, any
+  semantic difference does not),
+* every :class:`~repro.core.isa.HardwareConfig` field,
+* the compiler options (``strategy``, ``use_luts``, ``optimize``),
+* the artifact :data:`~repro.sim.artifact.FORMAT_VERSION` (a schema bump
+  silently invalidates old entries — they just miss).
+
+Entries are ordinary :mod:`repro.sim.artifact` files named ``<key>.npz``
+under the cache directory (``REPRO_SIM_CACHE`` env var, default
+``~/.cache/repro-sim``), so a cache entry doubles as a shareable artifact.
+A loaded entry is marked ``stats["cache_hit"] = True`` — the flag the
+acceptance timing checks (and ``benchmarks/bench_compile.py``'s cold/warm
+rows) key on.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import asdict
+from pathlib import Path
+from typing import Optional, Union
+
+from ..core.compile import Program
+from ..core.isa import HardwareConfig
+from ..core.netlist import Circuit
+from .artifact import FORMAT_VERSION, load_program, save_program
+
+ENV_VAR = "REPRO_SIM_CACHE"
+
+
+def default_cache_dir() -> Path:
+    return Path(os.environ.get(ENV_VAR, "~/.cache/repro-sim")).expanduser()
+
+
+def cache_key(circuit: Circuit, hw: HardwareConfig, *,
+              strategy: str = "balanced", use_luts: bool = True,
+              optimize: bool = True) -> str:
+    """Deterministic key for one (circuit, hardware, options) request."""
+    payload = json.dumps({
+        "format_version": FORMAT_VERSION,
+        "circuit": circuit.fingerprint(),
+        "hw": asdict(hw),
+        "strategy": strategy,
+        "use_luts": bool(use_luts),
+        "optimize": bool(optimize),
+    }, sort_keys=True)
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()
+
+
+class CompileCache:
+    """A directory of ``<key>.npz`` Program artifacts."""
+
+    def __init__(self, root: Union[str, Path, None] = None):
+        self.root = Path(root) if root is not None else default_cache_dir()
+
+    def path(self, key: str) -> Path:
+        return self.root / f"{key}.npz"
+
+    def load(self, key: str) -> Optional[Program]:
+        """The cached Program for ``key`` (marked ``stats['cache_hit']``),
+        or None. A corrupt or version-incompatible entry reads as a miss —
+        the caller recompiles and overwrites it."""
+        p = self.path(key)
+        if not p.is_file():
+            return None
+        try:
+            prog = load_program(p)
+        except Exception:
+            return None
+        prog.stats["cache_hit"] = True
+        return prog
+
+    def store(self, key: str, prog: Program) -> Path:
+        return save_program(prog, self.path(key))
+
+
+def resolve_cache(cache: Union[bool, str, Path, "CompileCache", None]
+                  ) -> Optional[CompileCache]:
+    """Normalize the facade's ``cache=`` argument: ``False``/``None``
+    disables caching, ``True`` uses the default directory, a path or a
+    :class:`CompileCache` selects an explicit one."""
+    if cache is None or cache is False:
+        return None
+    if cache is True:
+        return CompileCache()
+    if isinstance(cache, CompileCache):
+        return cache
+    return CompileCache(cache)

@@ -1,0 +1,232 @@
+"""``repro.sim`` front door: compile once, simulate anywhere.
+
+``compile(source, ...)`` accepts a benchmark *name* (``"mc"``), a built
+:class:`~repro.circuits.common.Bench` or a raw
+:class:`~repro.core.netlist.Circuit`, runs (or cache-loads) the static-BSP
+compiler, and returns a :class:`Simulation` — a handle that owns the
+compiled :class:`~repro.core.compile.Program`, remembers the source bench
+(cycle budget, per-seed init planes) and hands out protocol-conforming
+engines on demand::
+
+    import repro.sim as sim
+
+    s = sim.compile("mc", scale="small", seeds=[1, 2, 3], cache=True)
+    results = s.run()                  # auto: BatchedEngine, 3 stimuli
+    assert all(r.finished for r in results)
+
+    r = s.run(engine="isa")            # same Program, numpy backend
+    s.save("mc.npz"); s2 = sim.load("mc.npz")   # persistent artifact
+
+Engine auto-selection: a ``mesh=`` requests the sharded ``GridEngine``, a
+batch (``seeds=``/``images=`` with more than one stimulus) the vmapped
+``BatchedEngine``, otherwise the specialized single-stimulus jnp engine.
+``engine="oracle"`` cross-checks against the netlist interpreter (available
+whenever the Simulation still knows its source circuit). All
+``init_images``/``Planes`` plumbing stays behind this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Union
+
+from ..core.compile import Program, compile_circuit
+from ..core.isa import HardwareConfig
+from ..core.netlist import Circuit
+from .artifact import load_program
+from .cache import CompileCache, cache_key, resolve_cache
+from .engine import (BatchedEngine, Engine, GridEngine, Images, IsaEngine,
+                     MachineEngine, OracleEngine)
+from .result import RunResult
+
+# Extra Vcycles past a bench's FINISH cycle: the budget must overshoot so a
+# missing exception is detected as "ran past the end", never masked.
+CYCLE_SLACK = 10
+
+_ENGINE_KINDS = ("auto", "machine", "jnp", "pallas", "seed", "batched",
+                 "grid", "isa", "oracle", "netlist", "reference")
+
+
+@dataclass
+class Simulation:
+    """A compiled design plus everything needed to simulate it."""
+
+    program: Program
+    bench: Optional["Bench"] = None          # noqa: F821 (circuits.common)
+    circuit: Optional[Circuit] = None
+    meta: Dict = field(default_factory=dict)
+    # default-option engine memo per kind (see Simulation.run)
+    _engines: Dict[str, Engine] = field(default_factory=dict, repr=False)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_cycles(self) -> Optional[int]:
+        """The bench's self-checking FINISH cycle, when known."""
+        return self.bench.n_cycles if self.bench is not None else None
+
+    @property
+    def batch(self) -> int:
+        """Stimulus count carried by the source bench (1 when legacy)."""
+        return self.bench.batch if self.bench is not None else 1
+
+    @property
+    def cache_hit(self) -> bool:
+        return bool(self.program.stats.get("cache_hit", False))
+
+    def default_cycles(self) -> int:
+        if self.n_cycles is None:
+            raise ValueError(
+                "this Simulation has no bench cycle budget — pass "
+                "cycles= explicitly")
+        return self.n_cycles + CYCLE_SLACK
+
+    def images(self) -> Optional[List[Images]]:
+        """Per-stimulus (reg, spad, gmem) init images from the bench's
+        seed planes, or None for a legacy single-stimulus build."""
+        if self.bench is None or self.bench.reg_planes is None:
+            return None
+        return self.bench.images(self.program)
+
+    # ------------------------------------------------------------------
+    def engine(self, kind: str = "auto", *, mesh=None,
+               images: Optional[Sequence[Images]] = None,
+               batch: Optional[int] = None, backend: str = "jnp",
+               specialize: bool = True, **opts) -> Engine:
+        """Construct a protocol-conforming engine over this Program.
+
+        ``kind="auto"`` picks grid (when ``mesh`` is given), batched (when
+        the bench carries several stimuli or ``images``/``batch`` request
+        them) or the single-stimulus jnp engine. Explicit kinds:
+        ``machine``/``jnp``, ``pallas``, ``seed`` (the unspecialized
+        baseline arm), ``batched``, ``grid``, ``isa``,
+        ``oracle``/``netlist``/``reference``.
+        """
+        if kind not in _ENGINE_KINDS:
+            raise ValueError(
+                f"unknown engine kind {kind!r}; choose from "
+                f"{', '.join(_ENGINE_KINDS)}")
+        if images is None:
+            images = self.images()
+        B = batch or (len(images) if images is not None else 1)
+
+        if kind in ("oracle", "netlist", "reference"):
+            if self.circuit is None:
+                raise ValueError(
+                    "oracle engine needs the source circuit — this "
+                    "Simulation was loaded from an artifact")
+            return OracleEngine(self.circuit, self.program)
+        if kind == "grid" or (kind == "auto" and mesh is not None):
+            if mesh is None:
+                raise ValueError("grid engine needs a mesh=")
+            return GridEngine(self.program, mesh, images=images, **opts)
+        if kind == "batched" or (kind == "auto" and B > 1):
+            return BatchedEngine(self.program, images=images,
+                                 batch=None if images is not None else B,
+                                 backend=backend, **opts)
+        if kind == "isa":
+            return IsaEngine(self.program,
+                             images=images[0] if images else None)
+        if kind == "pallas":
+            backend = "pallas"
+        if kind == "seed":
+            specialize = False
+        return MachineEngine(self.program, backend=backend,
+                             specialize=specialize,
+                             images=images[0] if images else None, **opts)
+
+    def run(self, cycles: Optional[int] = None, *, engine: str = "auto",
+            **opts) -> Union[RunResult, List[RunResult]]:
+        """Compile-free simulation in one call: build the (auto-selected)
+        engine, run ``cycles`` Vcycles (default: the bench budget plus
+        slack) and return the uniform result — one :class:`RunResult`, or
+        a per-stimulus list when the engine is batched.
+
+        Engines built with default options are memoized per kind (reset
+        before each run), so repeated ``run()`` calls pay the XLA trace
+        once; calls with explicit options construct a fresh engine — hold
+        your own ``Simulation.engine(...)`` to amortize those."""
+        if opts:
+            eng = self.engine(engine, **opts)
+        else:
+            eng = self._engines.get(engine)
+            if eng is None:
+                eng = self._engines[engine] = self.engine(engine)
+            else:
+                eng.reset()
+        n = cycles if cycles is not None else self.default_cycles()
+        if eng.batch > 1:
+            return eng.run_batch(n)
+        return eng.run(n)
+
+    # ------------------------------------------------------------------
+    def save(self, path: Union[str, Path]) -> Path:
+        """Persist the compiled Program (see :mod:`repro.sim.artifact`).
+        The bench/circuit are *not* serialized — a loaded Simulation can
+        run every compiled engine but not the netlist oracle."""
+        return self.program.save(path)
+
+    @classmethod
+    def load(cls, path: Union[str, Path]) -> "Simulation":
+        return cls(program=load_program(path))
+
+
+def _resolve_source(source, scale: str, seeds, overrides):
+    """(bench, circuit) from a name / Bench / Circuit source."""
+    from ..circuits import build
+    from ..circuits.common import Bench
+    if isinstance(source, str):
+        return build(source, scale, seeds=seeds, **overrides), None
+    if seeds is not None or overrides:
+        raise ValueError(
+            "seeds=/build overrides apply when compiling by circuit name; "
+            "pass a name like sim.compile('mc', seeds=[...])")
+    if isinstance(source, Bench):
+        return source, None
+    if isinstance(source, Circuit):
+        return None, source
+    raise TypeError(
+        f"cannot compile {type(source).__name__}: expected a circuit "
+        "name, a Bench, or a Circuit")
+
+
+def compile(source, hw: Optional[HardwareConfig] = None, *,
+            scale: str = "full", seeds: Optional[Sequence[int]] = None,
+            optimize: bool = True, use_luts: bool = True,
+            strategy: str = "balanced",
+            cache: Union[bool, str, Path, CompileCache, None] = None,
+            **overrides) -> Simulation:
+    """Compile ``source`` (benchmark name, Bench, or Circuit) into a
+    :class:`Simulation`.
+
+    ``seeds=[s0, s1, ...]`` (name sources) builds a batched bench: one
+    structural netlist, per-seed init planes, so every stimulus shares the
+    compiled Program. ``cache=True`` (or a directory path) consults the
+    on-disk compile cache first — on a hit the entire middle-end is
+    skipped and ``Simulation.cache_hit`` is set; on a miss the freshly
+    compiled Program is stored for next time.
+    """
+    bench, circuit = _resolve_source(source, scale, seeds, overrides)
+    if bench is not None:
+        circuit = bench.circuit
+    hw = hw or HardwareConfig()
+
+    cc = resolve_cache(cache)
+    prog = None
+    key = None
+    if cc is not None:
+        key = cache_key(circuit, hw, strategy=strategy, use_luts=use_luts,
+                        optimize=optimize)
+        prog = cc.load(key)
+    if prog is None:
+        prog = compile_circuit(circuit, hw, strategy=strategy,
+                               use_luts=use_luts, optimize=optimize)
+        prog.stats["cache_hit"] = False
+        if cc is not None:
+            cc.store(key, prog)
+    return Simulation(program=prog, bench=bench, circuit=circuit,
+                      meta={"cache_key": key})
+
+
+def load(path: Union[str, Path]) -> Simulation:
+    """Load a persisted Program artifact as a ready-to-run Simulation."""
+    return Simulation.load(path)

@@ -1,0 +1,118 @@
+"""Persistent Program artifacts: hypothesis round-trip properties.
+
+``Program.save``/``Program.load`` must be *bit-exact*: every dense array
+(code, LUTs, init images, exchange tables, slot-op mask) identical in
+value, shape and dtype; the ``outputs``/``state_regs`` maps and ``stats``
+structurally equal; and — the property that actually matters — a loaded
+Program produces identical ``RunResult``s to the one that was saved.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+
+import hypothesis.strategies as st
+from hypothesis import HealthCheck, given, settings
+
+import repro.sim as sim
+from repro.circuits import build
+from repro.core import HardwareConfig
+from repro.sim.artifact import _ARRAY_FIELDS
+
+HW = HardwareConfig(grid_width=4, grid_height=4)
+ARRAYS = _ARRAY_FIELDS + ("slot_op_mask",)
+
+
+def _assert_bit_exact(orig, loaded):
+    for f in ARRAYS:
+        a, b = getattr(orig, f), getattr(loaded, f)
+        assert a.dtype == b.dtype, f
+        assert a.shape == b.shape, f
+        np.testing.assert_array_equal(a, b, err_msg=f)
+    assert loaded.name == orig.name
+    assert loaded.hw == orig.hw
+    assert loaded.t_compute == orig.t_compute
+    assert loaded.vcpl == orig.vcpl
+    assert loaded.used_cores == orig.used_cores
+    assert loaded.outputs == orig.outputs
+    assert loaded.state_regs == orig.state_regs
+    assert loaded.stats == orig.stats
+
+
+@settings(max_examples=5, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**31 - 1),
+       n_walkers=st.sampled_from([2, 4]),
+       n_cycles=st.sampled_from([12, 24, 32]),
+       optimize=st.booleans())
+def test_program_roundtrip_bit_exact(tmp_path_factory, seed, n_walkers,
+                                     n_cycles, optimize):
+    """mc small-scale, varied shape/seed/pipeline: save → load preserves
+    every array bit and every metadata map, and the loaded Program's
+    RunResult equals the original's on two independent engines."""
+    td = tmp_path_factory.mktemp("artifacts")
+    bench = build("mc", "small", seed=seed, n_walkers=n_walkers,
+                  n_cycles=n_cycles)
+    s = sim.compile(bench, HW, optimize=optimize)
+    path = td / f"mc_{seed}_{n_walkers}_{n_cycles}_{optimize}.npz"
+    s.save(path)
+    loaded = sim.load(path)
+    _assert_bit_exact(s.program, loaded.program)
+
+    n = bench.n_cycles + sim.CYCLE_SLACK
+    # the jit-free numpy engine keeps the property loop fast
+    r0 = s.engine("isa").run(n)
+    r1 = loaded.engine("isa").run(n)
+    assert r1 == r0
+    assert r1.registers == r0.registers
+    assert r1.exceptions == r0.exceptions
+    assert r1.cycles == r0.cycles
+    assert r0.finished
+
+
+def test_loaded_program_identical_runresult_jnp(tmp_path):
+    """The headline acceptance check on the real engine: compile mc
+    small, save, load, run both through the specialized jnp engine —
+    identical RunResults (registers, outputs, exceptions, perf)."""
+    s = sim.compile("mc", HW, scale="small")
+    s.save(tmp_path / "mc.npz")
+    loaded = sim.load(tmp_path / "mc.npz")
+    n = s.default_cycles()
+    r0 = s.run(n)
+    r1 = loaded.run(n)
+    assert r1 == r0
+    assert r1.finished
+
+
+def test_format_version_gate(tmp_path):
+    """An artifact from an incompatible schema is refused, not mis-read."""
+    import io
+    import json
+
+    s = sim.compile("mc", HW, scale="small")
+    p = tmp_path / "mc.npz"
+    s.save(p)
+    with np.load(p) as z:
+        payload = {k: z[k] for k in z.files}
+    meta = json.loads(bytes(payload["__meta__"]).decode())
+    meta["format_version"] = 999
+    payload["__meta__"] = np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    p.write_bytes(buf.getvalue())
+    with pytest.raises(ValueError, match="format"):
+        sim.load(p)
+
+
+def test_save_never_leaves_torn_artifact(tmp_path):
+    """save() writes via a temp file + atomic rename: the destination is
+    either absent or a complete artifact, and re-saving overwrites."""
+    s = sim.compile("mc", HW, scale="small")
+    p = tmp_path / "mc.npz"
+    s.save(p)
+    s.save(p)                       # overwrite in place
+    assert not list(tmp_path.glob("*.tmp")) \
+        and not list(tmp_path.glob(".*.tmp"))
+    _assert_bit_exact(s.program, sim.load(p).program)
