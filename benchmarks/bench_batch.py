@@ -8,6 +8,20 @@ B ∈ {1, 8, 64} against the honest baseline — B *sequential* runs of the
 PR 1 specialized single-stimulus engine — and records per-element
 bit-exactness of the batched run against those baselines.
 
+PR 5 adds **sharded points** when more than one device is visible
+(``core.bsp.ShardedBatchedMachine``: the batch axis split ``[D, B/D]``
+over the mesh): per-B ``sharded_points`` entries record D, B/D, aggregate
+and per-device Vcycles/sec and the speedup over the *unsharded* batched
+path at equal B — the existing ``points`` schema is unchanged for
+cross-PR comparability. Refresh the artifact on forced host devices::
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.bench_batch
+
+``--exact`` runs the sharded bit-exactness sweep instead of timing: B=64
+stimuli of every benchmark circuit, each element compared against an
+independent single-stimulus specialized run (``BENCH_sharded_exact``).
+
 Emits ``results/bench/BENCH_batch.json`` and a root-level copy
 (``BENCH_batch.json``).
 
@@ -23,15 +37,24 @@ import numpy as np
 
 from benchmarks.common import best_time, row_csv, run_rows
 import repro.sim as sim
+from repro.circuits import CIRCUITS
 from repro.core import HardwareConfig
-from repro.core.bsp import BatchedMachine, Machine
+from repro.core.bsp import BatchedMachine, Machine, ShardedBatchedMachine
 
 HW = HardwareConfig(grid_width=5, grid_height=5)
 # full-scale LUT-free circuits spanning the utilization range: dense
 # (bc, cgra), sparse (mc), serial (jpeg) and network (rv32r) schedules
 NAMES = ["bc", "mc", "cgra", "jpeg", "rv32r"]
 BATCHES = [1, 8, 64]
+# sharded sweep: B values (each with its own same-B unsharded reference)
+# x device counts. B/D is the per-device batch: on CPU the per-op dispatch
+# overhead of the specialized graph amortizes over it, so small shards of
+# overhead-bound circuits lose what the mesh parallelism gains — the sweep
+# records the crossover instead of a single cherry-picked point.
+SHARD_BATCHES = [64, 512]
+SHARD_DEVICES = [2, 4, 8]
 REPS = 3
+EXACT_B = 64
 
 
 def _time_batched(bm: BatchedMachine, n: int, reps: int) -> float:
@@ -51,15 +74,20 @@ def _time_sequential(m: Machine, images, n: int, reps: int) -> float:
     return best_time(once, reps)
 
 
-def bench_circuit(nm: str, scale: str, batches, reps: int) -> dict:
-    bmax = max(batches)
+def bench_circuit(nm: str, scale: str, batches, shard_batches,
+                  reps: int) -> dict:
+    bmax = max(batches + shard_batches) if shard_batches else max(batches)
     s = sim.compile(nm, HW, scale=scale,
                     seeds=[1000 + i for i in range(bmax)], use_luts=False)
     bench, prog = s.bench, s.program
-    images = s.images()
+    stacked = s.images_stacked()       # host-parallel, batched layout
+
+    def img(i):
+        return tuple(a[i] for a in stacked)
+
     n = min(max(8, bench.n_cycles - 2), 128)
 
-    single = s.engine("machine", images=None).m   # PR 1 specialized engine
+    single = Machine(prog)                        # PR 1 specialized engine
     row = {
         "circuit": nm,
         "scale": scale,
@@ -70,10 +98,10 @@ def bench_circuit(nm: str, scale: str, batches, reps: int) -> dict:
         "points": [],
     }
     for B in batches:
-        imgs = images[:B]
-        bm = s.engine("batched", images=imgs).m
+        bm = BatchedMachine(prog, images=tuple(a[:B] for a in stacked))
         t_b = _time_batched(bm, n, reps)
-        t_seq = _time_sequential(single, imgs, n, reps)
+        t_seq = _time_sequential(single, [img(i) for i in range(B)], n,
+                                 reps)
         agg_b = B * n / t_b
         agg_seq = B * n / t_seq
         row["points"].append({
@@ -85,13 +113,46 @@ def bench_circuit(nm: str, scale: str, batches, reps: int) -> dict:
         row_csv(f"batch/{nm}/B{B}", 1e6 * t_b / (B * n),
                 f"{agg_b / agg_seq:.2f}x_vs_seq")
 
-    # per-element bit-exactness at the largest batch, against independent
-    # single-stimulus runs of the same stimuli
-    bm = s.engine("batched").m
+    # sharded points: the same batch, split [D, B/D] over the device mesh
+    # (a parallel list — the ``points`` schema above is frozen for
+    # cross-PR comparability). Each B carries its own same-B unsharded
+    # reference so speedup_vs_unsharded is self-contained.
+    D_avail = len(jax.devices())
+    if D_avail > 1 and shard_batches:
+        row["sharded_points"] = []
+        for B in shard_batches:
+            imgs = tuple(a[:B] for a in stacked)
+            bm = BatchedMachine(prog, images=imgs)
+            t_u = _time_batched(bm, n, reps)
+            agg_u = B * n / t_u
+            for D in sorted({d for d in SHARD_DEVICES if d <= D_avail}
+                            | {D_avail}):
+                sm = ShardedBatchedMachine(prog, images=imgs,
+                                           devices=jax.devices()[:D])
+                t_s = _time_batched(sm, n, reps)
+                agg_s = B * n / t_s
+                row["sharded_points"].append({
+                    "B": B,
+                    "D": D,
+                    "B_per_device": sm.Bp // D,
+                    "unsharded_agg_vcycles_per_s": agg_u,
+                    "sharded_agg_vcycles_per_s": agg_s,
+                    "per_device_vcycles_per_s": agg_s / D,
+                    "speedup_vs_unsharded": agg_s / agg_u,
+                })
+                row_csv(f"batch/{nm}/B{B}/D{D}", 1e6 * t_s / (B * n),
+                        f"{agg_s / agg_u:.2f}x_vs_unsharded")
+
+    # per-element bit-exactness at the largest *timing* batch, against
+    # independent single-stimulus runs of the same stimuli (the full
+    # sharded bit-exactness sweep lives in --exact / BENCH_sharded_exact)
+    Bx = max(batches)
+    bm = BatchedMachine(prog, images=tuple(a[:Bx] for a in stacked))
     st = bm.run(bm.init_state(), bench.n_cycles + 10)
     exact = True
-    for i, img in enumerate(images):
-        s1 = single.run(single.init_state(images=img), bench.n_cycles + 10)
+    for i in range(Bx):
+        s1 = single.run(single.init_state(images=img(i)),
+                        bench.n_cycles + 10)
         exact = exact and (
             np.array_equal(np.asarray(st.regs[i]), np.asarray(s1.regs))
             and np.array_equal(np.asarray(st.spads[i]),
@@ -100,24 +161,89 @@ def bench_circuit(nm: str, scale: str, batches, reps: int) -> dict:
                                np.asarray(s1.flags)))
     row["bit_exact_vs_single"] = bool(exact)
     row["all_finish"] = bool(all(
-        set(e.values()) == {1} for e in bm.exceptions(st)))
+        set(e.values()) == {1}
+        for e in bm.exceptions(st)))
     return row
+
+
+def exact_circuit(nm: str, B: int = EXACT_B) -> dict:
+    """Sharded bit-exactness sweep row: run B stimuli of ``nm`` (full
+    scale, default compile options) sharded over every visible device and
+    compare each element against an independent single-stimulus
+    specialized run — registers, scratchpads, flags and counters."""
+    s = sim.compile(nm, HW, seeds=[1000 + i for i in range(B)])
+    prog, bench = s.program, s.bench
+    stacked = s.images_stacked()
+    sm = ShardedBatchedMachine(prog, images=stacked)
+    st = sm.run(sm.init_state(), bench.n_cycles + 10)
+    single = Machine(prog)
+    exact = True
+    for i in range(B):
+        img = tuple(a[i] for a in stacked)
+        s1 = single.run(single.init_state(images=img), bench.n_cycles + 10)
+        exact = exact and all(
+            np.array_equal(np.asarray(a[i]), np.asarray(b))
+            for a, b in ((st.regs, s1.regs), (st.spads, s1.spads),
+                         (st.flags, s1.flags), (st.counters, s1.counters)))
+    # a divergence is recorded in the row (never asserted here): the
+    # artifact keeps the failing circuit visible and run_exact turns any
+    # false field into a non-zero exit
+    return {
+        "circuit": nm,
+        "B": B,
+        "D": sm.D,
+        "B_per_device": sm.Bp // sm.D,
+        "bit_exact_vs_single": bool(exact),
+        "all_finish": bool(all(set(e.values()) == {1}
+                               for e in sm.exceptions(st))),
+    }
 
 
 def run(names=None, smoke: bool = False) -> None:
     scale = "small" if smoke else "full"
     batches = [1, 4] if smoke else BATCHES
+    # the sharded sweep is the only consumer of B > max(batches): don't
+    # build (or stack) the extra stimuli on a single-device host where
+    # the whole sweep is skipped
+    shard_batches = [] if len(jax.devices()) < 2 else \
+        ([4] if smoke else SHARD_BATCHES)
     reps = 1 if smoke else REPS
     run_rows(names or NAMES,
-             lambda nm: bench_circuit(nm, scale, batches, reps),
+             lambda nm: bench_circuit(nm, scale, batches, shard_batches,
+                                      reps),
              "BENCH_batch", smoke,
              lambda rows: "best batched speedup vs sequential "
-             "single-stimulus: %.2fx"
-             % max((p["speedup_vs_sequential"]
-                    for r in rows for p in r["points"]), default=0.0))
+             "single-stimulus: %.2fx; best sharded vs unsharded: %.2fx"
+             % (max((p["speedup_vs_sequential"]
+                     for r in rows for p in r["points"]), default=0.0),
+                max((p["speedup_vs_unsharded"] for r in rows
+                     for p in r.get("sharded_points", [])), default=0.0)))
+
+
+def run_exact(names=None, smoke: bool = False) -> None:
+    import json
+
+    from benchmarks.common import RESULTS
+
+    B = 8 if smoke else EXACT_B
+    run_rows(names or list(CIRCUITS),
+             lambda nm: exact_circuit(nm, B),
+             "BENCH_sharded_exact", smoke,
+             lambda rows: "sharded bit-exact on %d/%d circuits at B=%d"
+             % (sum(r["bit_exact_vs_single"] for r in rows), len(rows), B))
+    artifact = "BENCH_sharded_exact" + ("_smoke" if smoke else "")
+    rows = json.loads((RESULTS / f"{artifact}.json").read_text())
+    bad = [r["circuit"] for r in rows if not r["bit_exact_vs_single"]]
+    if bad:
+        raise SystemExit(
+            f"sharded runs diverged from single-stimulus runs on: "
+            f"{', '.join(bad)}")
 
 
 if __name__ == "__main__":
     argv = sys.argv[1:]
-    run([a for a in argv if not a.startswith("-")] or None,
-        smoke="--smoke" in argv)
+    names = [a for a in argv if not a.startswith("-")] or None
+    if "--exact" in argv:
+        run_exact(names, smoke="--smoke" in argv)
+    else:
+        run(names, smoke="--smoke" in argv)

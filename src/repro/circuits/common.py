@@ -131,6 +131,14 @@ class Bench:
         return [program.init_images(r, m)
                 for r, m in zip(self.reg_planes, self.mem_planes)]
 
+    def images_batch(self, program, workers: Optional[int] = None):
+        """Stacked ``([B, C, R], [B, C, S], [B, G])`` init images,
+        generated host-parallel (:meth:`Program.init_images_batch`) — the
+        layout the batched/sharded engines consume directly."""
+        assert self.reg_planes is not None, "bench was not built with seeds"
+        return program.init_images_batch(self.reg_planes, self.mem_planes,
+                                         workers=workers)
+
     def compile(self, hw=None, **options) -> "Simulation":  # noqa: F821
         """Compile this bench through the :mod:`repro.sim` facade — the
         returned Simulation knows the cycle budget and the seed planes, so

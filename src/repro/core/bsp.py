@@ -48,7 +48,9 @@ from typing import Dict, FrozenSet, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed.compat import shard_map
 from .compile import Program
 from .isa import Op
 
@@ -70,6 +72,23 @@ MAX_SCAN_SEGMENTS = 32
 
 # opcodes with no register result (SEND's value goes to the exchange only)
 _NO_WRITE_OPS = (Op.NOP, Op.ST, Op.GST, Op.EXPECT, Op.SEND)
+
+# per-element cycle counter value that marks a batch-padding element: it is
+# >= any real budget, so the element's freeze predicate is never active —
+# padding executes nothing, raises nothing, and costs nothing beyond the
+# dead lanes of its shard's vectorized ops
+PAD_FROZEN_CYC = np.int32(1 << 30)
+
+
+def _is_stacked(images) -> bool:
+    """True for the stacked ``([B, C, R], [B, C, S], [B, G])`` image form
+    (``Program.init_images_batch``) as opposed to a per-stimulus list of
+    ``(reg, spad, gmem)`` tuples. Shape-driven, not type-driven: a
+    per-stimulus sequence holds tuples (no ``ndim``), never 3-D arrays."""
+    return (len(images) == 3
+            and getattr(images[0], "ndim", 0) == 3
+            and getattr(images[1], "ndim", 0) == 3
+            and getattr(images[2], "ndim", 0) == 2)
 
 
 class MachineState(NamedTuple):
@@ -748,6 +767,7 @@ class BatchedMachine(Machine):
         # Machine; the pallas backend swaps in the batched chunk kernel below
         super().__init__(program, backend="jnp", compact=compact,
                          specialize=True, chunk=chunk)
+        C, R = self.C, self.R
         if images is None:
             assert batch is not None and batch >= 1, \
                 "BatchedMachine needs init images or an explicit batch size"
@@ -757,9 +777,17 @@ class BatchedMachine(Machine):
                                            (B,) + self.spad0.shape)
             self.bgmem0 = jnp.broadcast_to(self.gmem0,
                                            (B,) + self.gmem0.shape)
+        elif _is_stacked(images):
+            # pre-stacked [B, ...] image arrays (Program.init_images_batch /
+            # Bench.images_batch): already in the batched layout, no
+            # per-stimulus copies
+            ri, si, gi = images
+            B = int(np.asarray(ri).shape[0])
+            self.breg0 = jnp.asarray(np.asarray(ri)[:, :C, :R], U32)
+            self.bspad0 = jnp.asarray(np.asarray(si)[:, :C], U32)
+            self.bgmem0 = jnp.asarray(np.asarray(gi), U32)
         else:
             B = len(images)
-            C, R = self.C, self.R
             self.breg0 = jnp.asarray(
                 np.stack([np.asarray(ri)[:C, :R] for ri, _, _ in images]),
                 U32)
@@ -769,10 +797,14 @@ class BatchedMachine(Machine):
                 np.stack([np.asarray(gi) for _, _, gi in images]), U32)
         self.B = B
         self.backend = backend
+        # B=1 pays the plain specialized graph, not a vmap wrapper around it
+        self._plain = backend != "pallas" and B == 1
         if backend == "pallas":
             from ..kernels import ops as kops
             self._run_chunk = jax.jit(kops.make_vcycle_chunk(
                 program, self.C, self.chunk, interpret=interpret, batch=B))
+        elif self._plain:
+            self._run_chunk = jax.jit(self._b1chunk_impl)
         else:
             self._run_chunk = jax.jit(self._bchunk_impl)
 
@@ -787,6 +819,15 @@ class BatchedMachine(Machine):
             cache_tags=-jnp.ones((B, self.cache_lines), jnp.int32),
             counters=jnp.zeros((B, 4), jnp.uint32),
         )
+
+    def _b1chunk_impl(self, cyc, budget, carry):
+        """B=1 fast path: dispatch the plain specialized chunk on the
+        squeezed state — a batch of one should not pay the vmap wrapper
+        (BENCH_batch showed B=1 "batched" at ~1.2-1.4x the cost of the
+        single-stimulus engine for no benefit)."""
+        c1, out = self._chunk_impl(cyc[0], budget,
+                                   tuple(leaf[0] for leaf in carry))
+        return c1[None], tuple(leaf[None] for leaf in out)
 
     def _bchunk_impl(self, cyc, budget, carry):
         """K Vcycles for all B elements under one scan; element b freezes
@@ -842,6 +883,134 @@ class BatchedMachine(Machine):
             "stall_cycles": stalls,
             "machine_cycles": vcycles * self.p.vcpl + stalls,
         }
+
+
+class ShardedBatchedMachine(BatchedMachine):
+    """Data-parallel batched execution over a device mesh: ``[D, B/D]``.
+
+    ``BatchedMachine`` fills one device's data-parallel axis with B
+    stimuli; this engine shards *the batch axis itself* over a 1-D mesh of
+    D devices (the ROADMAP's next lever past PR 2, Parendi's thousand-way
+    extension of the paper's model). Each device runs the **same**
+    specialized Vcycle chunk — the exact ``_bchunk_impl`` graph (or the
+    grid-over-B Pallas chunk kernel) — on its own ``B/D``-element shard of
+    every state leaf under ``shard_map``. There is **no cross-device
+    communication at all**: stimuli are independent, so the BSP exchange
+    stays device-local and the only global coordination is the host's
+    once-per-chunk exception sync.
+
+    **Padding.** B is padded up to ``Bp = ceil(B/D)*D``. Padding elements
+    replicate stimulus 0's images but start their per-element cycle
+    counter at ``PAD_FROZEN_CYC`` (>= any budget), so their freeze
+    predicate is never active: they execute nothing, raise nothing, and
+    never appear in results — every accessor indexes only the logical
+    ``B`` elements.
+
+    **Sync model.** The per-device chunk additionally returns a ``[B/D]``
+    ``frozen`` mask (raised an exception, or exhausted the budget —
+    padding is always frozen by construction). The host's once-per-chunk
+    sync reads only the assembled ``[Bp]`` bool mask — an any-reduce over
+    the per-device masks, not the ``[Bp, C]`` flag planes — and stops
+    dispatching when every element froze.
+
+    Per-element semantics (freeze at the raising Vcycle, bit-exact state,
+    counters) are exactly ``BatchedMachine``'s: the same chunk body runs,
+    merely on a shard.
+    """
+
+    AXIS = "batch"
+
+    def __init__(self, program: Program, images=None,
+                 batch: Optional[int] = None, devices=None,
+                 backend: str = "jnp", interpret: bool = True,
+                 compact: bool = True, chunk: int = DEFAULT_CHUNK):
+        super().__init__(program, images=images, batch=batch,
+                         backend="jnp", interpret=interpret,
+                         compact=compact, chunk=chunk)
+        devices = list(devices) if devices is not None else jax.devices()
+        D = len(devices)
+        self.D = D
+        self.backend = backend
+        self.mesh = Mesh(np.asarray(devices), (self.AXIS,))
+        B = self.B
+        Bp = -(-B // D) * D
+        self.Bp = Bp
+        if Bp > B:
+            def padb(a):
+                return jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])], 0)
+            self.breg0 = padb(self.breg0)
+            self.bspad0 = padb(self.bspad0)
+            self.bgmem0 = padb(self.bgmem0)
+        # padding elements start pre-frozen (see PAD_FROZEN_CYC)
+        self._cyc0 = jnp.asarray(
+            np.where(np.arange(Bp) < B, 0, PAD_FROZEN_CYC).astype(np.int32))
+
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            local_chunk = kops.make_vcycle_chunk(
+                program, self.C, self.chunk, interpret=interpret,
+                batch=Bp // D)
+        else:
+            local_chunk = self._bchunk_impl
+
+        lead = lambda *tail: P(self.AXIS, *tail)
+        state_specs = (lead(None, None), lead(None, None), lead(None),
+                       lead(None), lead(None), lead(None))
+
+        def device_chunk(cyc, budget, *leaves):
+            """One device's K-Vcycle chunk on its local [B/D] shard; the
+            extra ``frozen`` output is what the host syncs on."""
+            cyc, out = local_chunk(cyc, budget, tuple(leaves))
+            frozen = jnp.any(out[3] != 0, axis=1) | (cyc >= budget)
+            return (cyc, frozen) + out
+
+        sharded = shard_map(
+            device_chunk, self.mesh,
+            in_specs=(lead(), P()) + state_specs,
+            out_specs=(lead(), lead()) + state_specs)
+        self._run_chunk = jax.jit(
+            lambda cyc, budget, carry: sharded(cyc, budget, *carry))
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> MachineState:
+        """Initial state in the sharded ``[Bp, ...]`` layout: every leaf
+        is placed batch-sharded over the mesh up front, so the first chunk
+        launch pays no resharding."""
+        sh = lambda n_tail: NamedSharding(
+            self.mesh, P(self.AXIS, *([None] * n_tail)))
+        Bp = self.Bp
+        return MachineState(
+            regs=jax.device_put(self.breg0, sh(2)),
+            spads=jax.device_put(self.bspad0, sh(2)),
+            gmem=jax.device_put(self.bgmem0, sh(1)),
+            flags=jax.device_put(jnp.zeros((Bp, self.C), U32), sh(1)),
+            cache_tags=jax.device_put(
+                -jnp.ones((Bp, self.cache_lines), jnp.int32), sh(1)),
+            counters=jax.device_put(jnp.zeros((Bp, 4), jnp.uint32), sh(1)),
+        )
+
+    def run(self, state: MachineState, num_cycles: int) -> MachineState:
+        """Chunked dispatch over the mesh: one host sync per chunk, on the
+        assembled per-device frozen masks only."""
+        cyc = self._cyc0
+        budget = jnp.int32(num_cycles)
+        n_launch = -(-int(num_cycles) // self.chunk) if num_cycles > 0 else 0
+        carry = tuple(state)
+        for _ in range(n_launch):
+            cyc, frozen, *carry = self._run_chunk(cyc, budget, carry)
+            carry = tuple(carry)
+            if np.asarray(frozen).all():
+                break
+        return MachineState(*carry)
+
+    def perf(self, state: MachineState, b: Optional[int] = None):
+        if b is not None:
+            return super().perf(state, b)
+        # aggregate over the *logical* batch only (padding rows are all
+        # zero by construction, but stay out of the contract regardless)
+        logical = MachineState(*(leaf[:self.B] for leaf in state))
+        return BatchedMachine.perf(self, logical)
 
 
 def _scan_with_trace(step, carry, code):

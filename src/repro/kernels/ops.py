@@ -68,6 +68,15 @@ def make_vcycle_chunk(program, C: int, K: int, interpret: bool = True,
     leaves have a leading [B] axis, ``cyc`` is ``[B]`` and the kernel runs
     one grid step per batch element (each element's state VMEM-resident
     for the whole chunk, exceptions frozen per element).
+
+    The batched binding composes with the device mesh: under
+    ``ShardedBatchedMachine(backend="pallas")`` this factory is called
+    with the **device-local** batch ``B/D`` and the returned ``bchunk``
+    runs inside ``shard_map`` — the kernel's grid axis then covers one
+    shard, per-element freezing stays device-local (the per-element
+    ``cyc``/flags predicate needs no cross-device state), and the shared
+    program blocks (code/cap/luts/exchange tables) are closed-over
+    constants replicated to every device.
     """
     if program.has_global:
         raise ValueError(

@@ -304,7 +304,14 @@ def vcycle_chunk_pallas_batched(code: jax.Array, cap: jax.Array,
                                            jax.Array]:
     """Up to K Vcycles for B whole machines in one launch (grid over B).
     regs [B, C, R] | spads [B, C, S] | flags [B, C] | cyc [B] | budget [1].
-    Returns (regs, spads, flags, n_executed[B])."""
+    Returns (regs, spads, flags, n_executed[B]).
+
+    ``B`` is whatever batch the caller holds — the whole stimulus batch on
+    one device, or a ``B/D`` shard when the call is traced inside
+    ``shard_map`` (``core.bsp.ShardedBatchedMachine``). Nothing in the
+    kernel is global-batch-aware: the grid, the block specs and the
+    per-element freeze predicate all derive from the local leading axis,
+    which is exactly what lets the device mesh carry the batch axis."""
     T, C, _ = code.shape
     B, _, R = regs.shape
     S = spads.shape[2]

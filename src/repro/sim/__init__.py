@@ -27,13 +27,14 @@ over those modules, not a replacement. See ``docs/api.md``.
 from .artifact import FORMAT_VERSION, load_program, save_program
 from .cache import CompileCache, cache_key, default_cache_dir
 from .engine import (BatchedEngine, Engine, GridEngine, IsaEngine,
-                     MachineEngine, OracleEngine)
+                     MachineEngine, OracleEngine, ShardedBatchedEngine)
 from .facade import CYCLE_SLACK, Simulation, compile, load
 from .result import FINISH, MISMATCH, RunResult
 
 __all__ = [
     "compile", "load", "Simulation", "RunResult", "Engine",
-    "MachineEngine", "BatchedEngine", "GridEngine", "IsaEngine",
+    "MachineEngine", "BatchedEngine", "ShardedBatchedEngine", "GridEngine",
+    "IsaEngine",
     "OracleEngine", "save_program", "load_program", "FORMAT_VERSION",
     "CompileCache", "cache_key", "default_cache_dir",
     "FINISH", "MISMATCH", "CYCLE_SLACK",

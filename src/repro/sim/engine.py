@@ -23,7 +23,8 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
 
 import numpy as np
 
-from ..core.bsp import DEFAULT_CHUNK, BatchedMachine, Machine
+from ..core.bsp import (DEFAULT_CHUNK, BatchedMachine, Machine,
+                        ShardedBatchedMachine)
 from ..core.compile import Program
 from ..core.interpreter import NetlistSim
 from ..core.isasim import IsaSim
@@ -190,6 +191,30 @@ class BatchedEngine:
 
     def perf(self, b: Optional[int] = None) -> Dict[str, float]:
         return self.m.perf(self.state, b)
+
+
+class ShardedBatchedEngine(BatchedEngine):
+    """B stimuli data-parallel over the device mesh
+    (``core.bsp.ShardedBatchedMachine``): each of D devices runs B/D
+    elements of the same compiled Program; per-element exceptions are
+    device-local and results (``RunResult`` per stimulus) are reassembled
+    across shards by the inherited accessors — padding elements (B not a
+    multiple of D) never appear in them."""
+
+    kind = "sharded"
+
+    def __init__(self, program: Program, *,
+                 images: Optional[Sequence[Images]] = None,
+                 batch: Optional[int] = None, devices=None,
+                 backend: str = "jnp", interpret: bool = True,
+                 compact: bool = True, chunk: int = DEFAULT_CHUNK):
+        self.program = program
+        self.m = ShardedBatchedMachine(
+            program, images=images, batch=batch, devices=devices,
+            backend=backend, interpret=interpret, compact=compact,
+            chunk=chunk)
+        self.batch = self.m.B
+        self.reset()
 
 
 class GridEngine:

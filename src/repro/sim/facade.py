@@ -17,9 +17,12 @@ engines on demand::
     r = s.run(engine="isa")            # same Program, numpy backend
     s.save("mc.npz"); s2 = sim.load("mc.npz")   # persistent artifact
 
-Engine auto-selection: a ``mesh=`` requests the sharded ``GridEngine``, a
-batch (``seeds=``/``images=`` with more than one stimulus) the vmapped
-``BatchedEngine``, otherwise the specialized single-stimulus jnp engine.
+Engine auto-selection: a ``mesh=`` requests the core-sharded
+``GridEngine``; a batch (``seeds=``/``images=`` with more than one
+stimulus) picks the mesh-sharded ``ShardedBatchedEngine`` when more than
+one device is visible and B >= 2*D (or ``shard_batch=True`` forces it) and
+the vmapped single-device ``BatchedEngine`` otherwise; a single stimulus
+gets the specialized jnp engine.
 ``engine="oracle"`` cross-checks against the netlist interpreter (available
 whenever the Simulation still knows its source circuit). All
 ``init_images``/``Planes`` plumbing stays behind this module.
@@ -30,13 +33,15 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Union
 
+import jax
+
 from ..core.compile import Program, compile_circuit
 from ..core.isa import HardwareConfig
 from ..core.netlist import Circuit
 from .artifact import load_program
 from .cache import CompileCache, cache_key, resolve_cache
 from .engine import (BatchedEngine, Engine, GridEngine, Images, IsaEngine,
-                     MachineEngine, OracleEngine)
+                     MachineEngine, OracleEngine, ShardedBatchedEngine)
 from .result import RunResult
 
 # Extra Vcycles past a bench's FINISH cycle: the budget must overshoot so a
@@ -44,7 +49,18 @@ from .result import RunResult
 CYCLE_SLACK = 10
 
 _ENGINE_KINDS = ("auto", "machine", "jnp", "pallas", "seed", "batched",
-                 "grid", "isa", "oracle", "netlist", "reference")
+                 "sharded", "grid", "isa", "oracle", "netlist", "reference")
+
+
+def _auto_shard(shard_batch, B: int, devices) -> bool:
+    """Auto-selection rule for the batch-sharded engine: an explicit
+    ``shard_batch`` wins; otherwise shard when the mesh has more than one
+    device and every device gets at least two elements (B >= 2*D — below
+    that the plain vmapped engine wins on dispatch overhead)."""
+    if shard_batch is not None:
+        return bool(shard_batch)
+    D = len(devices) if devices is not None else len(jax.devices())
+    return D > 1 and B >= 2 * D
 
 
 @dataclass
@@ -87,27 +103,43 @@ class Simulation:
             return None
         return self.bench.images(self.program)
 
+    def images_stacked(self, workers: Optional[int] = None):
+        """Stacked ``([B, C, R], [B, C, S], [B, G])`` init images,
+        generated host-parallel — the layout the batched/sharded engines
+        consume directly (None for a legacy single-stimulus build)."""
+        if self.bench is None or self.bench.reg_planes is None:
+            return None
+        return self.bench.images_batch(self.program, workers=workers)
+
     # ------------------------------------------------------------------
     def engine(self, kind: str = "auto", *, mesh=None,
                images: Optional[Sequence[Images]] = None,
                batch: Optional[int] = None, backend: str = "jnp",
-               specialize: bool = True, **opts) -> Engine:
+               specialize: bool = True, shard_batch: Optional[bool] = None,
+               devices=None, workers: Optional[int] = None,
+               **opts) -> Engine:
         """Construct a protocol-conforming engine over this Program.
 
-        ``kind="auto"`` picks grid (when ``mesh`` is given), batched (when
-        the bench carries several stimuli or ``images``/``batch`` request
-        them) or the single-stimulus jnp engine. Explicit kinds:
+        ``kind="auto"`` picks grid (when ``mesh`` is given),
+        batch-sharded (multi-stimulus on a multi-device mesh with
+        B >= 2*D, or ``shard_batch=True`` — here or at
+        :func:`compile` time), batched (several stimuli on one device)
+        or the single-stimulus jnp engine. Explicit kinds:
         ``machine``/``jnp``, ``pallas``, ``seed`` (the unspecialized
-        baseline arm), ``batched``, ``grid``, ``isa``,
+        baseline arm), ``batched``, ``sharded``, ``grid``, ``isa``,
         ``oracle``/``netlist``/``reference``.
         """
         if kind not in _ENGINE_KINDS:
             raise ValueError(
                 f"unknown engine kind {kind!r}; choose from "
                 f"{', '.join(_ENGINE_KINDS)}")
-        if images is None:
-            images = self.images()
-        B = batch or (len(images) if images is not None else 1)
+        if batch is not None:
+            B = batch
+        elif images is not None:
+            B = (int(images[0].shape[0])
+                 if getattr(images[0], "ndim", 0) == 3 else len(images))
+        else:
+            B = self.batch
 
         if kind in ("oracle", "netlist", "reference"):
             if self.circuit is None:
@@ -118,21 +150,38 @@ class Simulation:
         if kind == "grid" or (kind == "auto" and mesh is not None):
             if mesh is None:
                 raise ValueError("grid engine needs a mesh=")
+            if images is None:
+                images = self.images()
             return GridEngine(self.program, mesh, images=images, **opts)
+        if shard_batch is None:
+            shard_batch = self.meta.get("shard_batch")
+        if kind == "sharded" or (kind == "auto" and B > 1
+                                 and _auto_shard(shard_batch, B, devices)):
+            if images is None:
+                # host-parallel image generation straight into the
+                # stacked/sharded layout
+                images = self.images_stacked(workers=workers)
+            return ShardedBatchedEngine(
+                self.program, images=images,
+                batch=None if images is not None else B,
+                devices=devices, backend=backend, **opts)
         if kind == "batched" or (kind == "auto" and B > 1):
+            if images is None:
+                images = self.images_stacked(workers=workers)
             return BatchedEngine(self.program, images=images,
                                  batch=None if images is not None else B,
                                  backend=backend, **opts)
+        if images is None:
+            images = self.images()
+        img0 = _first_image(images)
         if kind == "isa":
-            return IsaEngine(self.program,
-                             images=images[0] if images else None)
+            return IsaEngine(self.program, images=img0)
         if kind == "pallas":
             backend = "pallas"
         if kind == "seed":
             specialize = False
         return MachineEngine(self.program, backend=backend,
-                             specialize=specialize,
-                             images=images[0] if images else None, **opts)
+                             specialize=specialize, images=img0, **opts)
 
     def run(self, cycles: Optional[int] = None, *, engine: str = "auto",
             **opts) -> Union[RunResult, List[RunResult]]:
@@ -170,6 +219,15 @@ class Simulation:
         return cls(program=load_program(path))
 
 
+def _first_image(images):
+    """Stimulus 0's (reg, spad, gmem) tuple from either image form."""
+    if not images:
+        return None
+    if getattr(images[0], "ndim", 0) == 3:          # stacked arrays
+        return tuple(a[0] for a in images)
+    return images[0]
+
+
 def _resolve_source(source, scale: str, seeds, overrides):
     """(bench, circuit) from a name / Bench / Circuit source."""
     from ..circuits import build
@@ -194,6 +252,7 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
             optimize: bool = True, use_luts: bool = True,
             strategy: str = "balanced",
             cache: Union[bool, str, Path, CompileCache, None] = None,
+            shard_batch: Optional[bool] = None,
             **overrides) -> Simulation:
     """Compile ``source`` (benchmark name, Bench, or Circuit) into a
     :class:`Simulation`.
@@ -204,6 +263,11 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     on-disk compile cache first — on a hit the entire middle-end is
     skipped and ``Simulation.cache_hit`` is set; on a miss the freshly
     compiled Program is stored for next time.
+
+    ``shard_batch=True`` forces batched runs onto the mesh-sharded engine
+    (``[D, B/D]`` elements per device); ``False`` pins the single-device
+    vmapped engine; the default (None) auto-selects sharding when more
+    than one device is visible and B >= 2*D.
     """
     bench, circuit = _resolve_source(source, scale, seeds, overrides)
     if bench is not None:
@@ -224,7 +288,7 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
         if cc is not None:
             cc.store(key, prog)
     return Simulation(program=prog, bench=bench, circuit=circuit,
-                      meta={"cache_key": key})
+                      meta={"cache_key": key, "shard_batch": shard_batch})
 
 
 def load(path: Union[str, Path]) -> Simulation:
