@@ -20,6 +20,16 @@ for per-core serialization — e.g. cgra on 5x5. That is the partitioner's
 cost model ignoring the critical path, the ROADMAP's next lever, not the
 middle-end; ``vcpl_small_*`` columns keep it visible.)
 
+Since the slack-driven scheduler landed (PR 6), each circuit also records
+the **scheduler strategy comparison** — the same optimized IR scheduled by
+the frozen ``"greedy"`` baseline vs the default ``"slack"`` strategy
+(ASAP/ALAP mobility priorities, earliest-slot SEND reservation,
+partition-aware rematerialization): ``vcpl_sched_{greedy,slack}``,
+``vcpl_over_lb_*`` (distance from the critical-path lower bound),
+``remat_sends`` / ``remat_instrs``, scheduler wall-time, and the shipped
+schedule's per-core utilization (``util_*``: NOp-density histogram,
+max/mean core load, epilogue share).
+
 Since the ``repro.sim`` facade landed, each circuit also records
 **cold-vs-warm compile time** through the on-disk compile cache
 (``compile_s_cold`` / ``compile_s_warm`` / ``cache_speedup`` /
@@ -100,6 +110,24 @@ def bench_circuit(nm: str, scale: str, reps: int) -> dict:
     row["vcpl_small_opt"] = run_progs["opt"].vcpl
     row["vcpl_small_off"] = run_progs["off"].vcpl
     po = progs["opt"]
+    # scheduler strategy comparison (PR 6): same middle-end output through
+    # the frozen greedy scheduler vs the slack-driven default (ASAP/ALAP
+    # mobility + earliest-slot SEND reservation + rematerialization)
+    pg = sim.compile(b, HW_PAPER, sched_strategy="greedy").program
+    row["vcpl_sched_greedy"] = pg.vcpl
+    row["vcpl_sched_slack"] = po.vcpl
+    row["vcpl_sched_delta"] = po.vcpl - pg.vcpl
+    row["vcpl_over_lb_greedy"] = pg.stats["vcpl_over_lb"]
+    row["vcpl_over_lb_slack"] = po.stats["vcpl_over_lb"]
+    row["sched_seconds_greedy"] = pg.stats["sched_seconds"]
+    row["sched_seconds_slack"] = po.stats["sched_seconds"]
+    row["sched_prio"] = po.stats["sched_prio"]
+    row["remat_sends"] = po.stats["remat_sends"]
+    row["remat_instrs"] = po.stats["remat_instrs"]
+    # per-core utilization of the shipped (slack) schedule
+    for k in ("cores_used", "core_load_max", "core_load_mean",
+              "nop_density_hist", "epilogue_share"):
+        row[f"util_{k}"] = po.stats[k]
     row["instrs_lowered"] = po.stats["instrs_lowered"]
     row["instrs_post_opt"] = po.stats["instrs_opt"]
     row["instr_reduction_pct"] = 100.0 * (
@@ -123,6 +151,7 @@ def bench_circuit(nm: str, scale: str, reps: int) -> dict:
     row_csv(f"compile/{nm}", 1e6 / row["jnp_vcycles_per_s_opt"],
             f"instr -{row['instr_reduction_pct']:.1f}% "
             f"vcpl {row['vcpl_off']}->{row['vcpl_opt']} "
+            f"sched {row['vcpl_sched_greedy']}->{row['vcpl_sched_slack']} "
             f"{row['speedup_vs_off']:.2f}x_vs_off")
     return row
 
@@ -133,9 +162,12 @@ def run(names=None, smoke: bool = False) -> None:
     run_rows([nm for nm in sorted(CIRCUITS) if not names or nm in names],
              lambda nm: bench_circuit(nm, scale, reps),
              "BENCH_compile", smoke,
-             lambda rows: "mean instr reduction %.1f%%, best engine speedup "
-             "%.2fx, best warm-cache compile speedup %.0fx" % (
+             lambda rows: "mean instr reduction %.1f%%, slack vcpl wins "
+             "%d/%d (regressions %d), best engine speedup %.2fx, best "
+             "warm-cache compile speedup %.0fx" % (
                  sum(r["instr_reduction_pct"] for r in rows) / max(len(rows), 1),
+                 sum(r["vcpl_sched_delta"] < 0 for r in rows), len(rows),
+                 sum(r["vcpl_sched_delta"] > 0 for r in rows),
                  max((r["speedup_vs_off"] for r in rows), default=0.0),
                  max((r["cache_speedup"] for r in rows), default=0.0)))
 

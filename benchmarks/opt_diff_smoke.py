@@ -2,9 +2,9 @@
 
 Two guarantees, cheap enough for every CI run:
 
-  1. **Legacy freeze** — ``compile_circuit(optimize=False)`` on one
-     full-scale circuit must stay *bit-identical* to the committed
-     expectations (``results/expectations/optoff_<circuit>.json``: binary
+  1. **Legacy freeze** — ``compile_circuit(optimize=False,
+     sched_strategy="greedy")`` on one full-scale circuit must stay
+     *bit-identical* to the committed expectations (``results/expectations/optoff_<circuit>.json``: binary
      image digests, VCPL, exchange tables, and the IsaSim end state). The
      legacy path is the fixed cross-PR baseline — if this trips, a change
      leaked into the pre-middle-end compiler.
@@ -57,7 +57,10 @@ def _digest(prog, sim: IsaSim, n_cycles: int) -> dict:
 
 def run(update: bool = False) -> None:
     b = build(CIRCUIT, "full")
-    p_off = compile_circuit(b.circuit, HW, optimize=False)
+    # both compiles pin the frozen greedy scheduler: this smoke guards the
+    # legacy pre-middle-end path, not the slack scheduler (vcpl_guard does)
+    p_off = compile_circuit(b.circuit, HW, optimize=False,
+                            sched_strategy="greedy")
     got = _digest(p_off, IsaSim(p_off), b.n_cycles)
     if update:
         EXPECT.parent.mkdir(parents=True, exist_ok=True)
@@ -72,7 +75,8 @@ def run(update: bool = False) -> None:
                 f"optimize=False path diverged from committed expectations "
                 f"({EXPECT.name}): {diff}")
     # differential: the optimized program reaches the same end state
-    p_opt = compile_circuit(b.circuit, HW, optimize=True)
+    p_opt = compile_circuit(b.circuit, HW, optimize=True,
+                            sched_strategy="greedy")
     sim = IsaSim(p_opt)
     assert sim.run(b.n_cycles + 10) == got["cycles"], "finish cycle differs"
     assert {str(c): int(e) for c, e in sim.exceptions().items()} \

@@ -7,6 +7,11 @@ per-optimization-pass time and instruction delta (``opt_<pass>_s`` /
 vs ``instrs_post_opt`` is the middle-end's input/output — note that
 optimization usually *reduces* total compile time: the partitioner,
 scheduler and register allocator chew on the smaller IR.
+
+Since PR 6 the breakdown also includes the partition-aware
+rematerialization pass (``pass_remat``) and the slack scheduler
+(``pass_schedule`` now covers two priority passes); ``remat_sends`` counts
+the NoC messages the pass converted into local recompute.
 """
 from __future__ import annotations
 
@@ -43,6 +48,8 @@ def run():
                      "instrs_lowered": prog.stats["instrs_lowered"],
                      "instrs_post_opt": prog.stats["instrs_opt"],
                      "split_procs": prog.stats["split_procs"],
+                     "vcpl": prog.vcpl,
+                     "remat_sends": prog.stats["remat_sends"],
                      **{f"pass_{k}": v for k, v in tm.items()},
                      **opt_cols})
         worst = max(tm, key=tm.get)

@@ -1,0 +1,94 @@
+"""CI guard: the slack scheduler's VCPL may not regress.
+
+The slack-driven scheduler (PR 6) closed most of the gap between the
+scheduled VCPL and its critical-path lower bound on the paper's 15x15
+grid. This guard keeps that win locked in: every full-scale bench circuit
+is compiled with the default ``sched_strategy="slack"`` (schedule validator
+on) and its VCPL compared against the committed expectations in
+``results/expectations/vcpl.json``.
+
+Two failure modes trip it:
+
+  * a circuit's slack VCPL exceeds its committed value by more than
+    ``TOLERANCE`` slots — a scheduler / rematerialization regression;
+  * slack VCPL exceeds the *greedy* VCPL recorded alongside it — the new
+    strategy must never lose to the baseline it replaced.
+
+Improvements do not fail the guard; they print a hint to refresh the
+expectations. Regenerate deliberately with:
+
+  PYTHONPATH=src python -m benchmarks.vcpl_guard --update
+
+CI runs the ``--smoke`` variant (a two-circuit subset) next to
+``opt_diff_smoke``; the full sweep is a couple of minutes of pure
+compilation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.circuits import CIRCUITS, build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+
+HW = HardwareConfig(grid_width=15, grid_height=15)
+EXPECT = (Path(__file__).resolve().parents[1] / "results" / "expectations"
+          / "vcpl.json")
+TOLERANCE = 0        # slots of allowed slack-VCPL growth per circuit
+SMOKE_CIRCUITS = ("bc", "vta")
+
+
+def measure(names) -> dict:
+    out = {}
+    for nm in names:
+        c = build(nm, "full").circuit
+        ps = compile_circuit(c, HW, sched_strategy="slack", check=True)
+        pg = compile_circuit(c, HW, sched_strategy="greedy", check=True)
+        out[nm] = {
+            "vcpl_slack": int(ps.vcpl),
+            "vcpl_greedy": int(pg.vcpl),
+            "crit_path_lb": int(ps.stats["crit_path_lb"]),
+            "remat_sends": int(ps.stats["remat_sends"]),
+        }
+    return out
+
+
+def run(update: bool = False, smoke: bool = False) -> None:
+    names = sorted(SMOKE_CIRCUITS if smoke else CIRCUITS)
+    got = measure(names)
+    if update:
+        EXPECT.parent.mkdir(parents=True, exist_ok=True)
+        EXPECT.write_text(json.dumps(measure(sorted(CIRCUITS)), indent=1,
+                                     sort_keys=True) + "\n")
+        print(f"# wrote {EXPECT}")
+        return
+    want = json.loads(EXPECT.read_text())
+    errors, better = [], []
+    for nm in names:
+        w, g = want[nm], got[nm]
+        if g["vcpl_slack"] > w["vcpl_slack"] + TOLERANCE:
+            errors.append(
+                f"{nm}: slack vcpl {g['vcpl_slack']} > committed "
+                f"{w['vcpl_slack']} (+{TOLERANCE} tolerance)")
+        if g["vcpl_slack"] > g["vcpl_greedy"]:
+            errors.append(
+                f"{nm}: slack vcpl {g['vcpl_slack']} worse than greedy "
+                f"{g['vcpl_greedy']}")
+        if g["vcpl_slack"] < w["vcpl_slack"]:
+            better.append(f"{nm} {w['vcpl_slack']}->{g['vcpl_slack']}")
+    if errors:
+        raise SystemExit("vcpl_guard FAILED:\n  " + "\n  ".join(errors))
+    if better:
+        print("# vcpl improved (" + ", ".join(better) +
+              ") — refresh with --update to lock it in")
+    wins = sum(got[nm]["vcpl_slack"] < got[nm]["vcpl_greedy"]
+               for nm in names)
+    print(f"# vcpl_guard OK: {len(names)} circuits, slack beats greedy on "
+          f"{wins}, regressions 0")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    run(update="--update" in argv, smoke="--smoke" in argv)

@@ -24,7 +24,8 @@ from .opt import optimize_lowered
 from .netlist import Circuit
 from .partition import Partition, SendEdge, partition
 from .regalloc import CoreAlloc, allocate
-from .schedule import ScheduleResult, schedule
+from .remat import rematerialize
+from .schedule import ScheduleResult, schedule, validate_schedule
 
 
 @dataclass
@@ -276,7 +277,18 @@ def compile_circuit(circuit: Circuit,
                     strategy: str = "balanced",
                     use_luts: bool = True,
                     optimize: bool = True,
+                    sched_strategy: str = "slack",
+                    check: bool = False,
                     timings: Optional[Dict[str, float]] = None) -> Program:
+    """Compile ``circuit`` into an executable :class:`Program`.
+
+    ``strategy`` picks the partition merge heuristic (``"balanced"`` /
+    ``"lpt"``), ``sched_strategy`` the scheduler (``"slack"`` — the
+    slack-driven default with rematerialization — or ``"greedy"``, the
+    original scheduler kept frozen for differential testing; see
+    ``core.schedule``). ``check=True`` re-validates the schedule against
+    the machine model (``core.schedule.validate_schedule``) before
+    emitting the binary."""
     hw = hw or HardwareConfig()
     tm: Dict[str, float] = {} if timings is None else timings
 
@@ -298,6 +310,16 @@ def compile_circuit(circuit: Circuit,
     tm["partition"] = time.perf_counter() - t0
     nproc = part.num_procs
     assert nproc <= hw.num_cores, (nproc, hw.num_cores)
+
+    # ---- partition-aware rematerialization (slack strategy only: the
+    # greedy path stays bit-identical to the frozen differential baseline)
+    remat_stats: Dict[str, int] = {"remat_sends": 0, "remat_instrs": 0,
+                                   "remat_procs": 0}
+    if sched_strategy == "slack":
+        t0 = time.perf_counter()
+        remat_stats = rematerialize(low, part, hw,
+                                    core_of_proc=list(range(nproc)))
+        tm["remat"] = time.perf_counter() - t0
 
     # protected vregs: values with consumers outside the instruction lists
     # (the same liveness roots the opt passes preserve)
@@ -352,7 +374,9 @@ def compile_circuit(circuit: Circuit,
         readers = [i for i, ins in enumerate(instrs)
                    if cur in ins.srcs and i != def_idx]
         desc = _reachable(adj, def_idx)
-        if not any(r in desc for r in readers):
+        if ((p, nxt, cur) not in part.remat_commits
+                and (p, cur) not in part.remat_reads
+                and not any(r in desc for r in readers)):
             # share machine register: next value lands in cur's register,
             # WAR edges force every read of cur to issue first.
             share[p][nxt] = cur
@@ -388,8 +412,11 @@ def compile_circuit(circuit: Circuit,
     # ---- schedule ---------------------------------------------------------
     t0 = time.perf_counter()
     sched = schedule(proc_instrs, core_of_proc, hw, send_dst_core,
-                     war_edges, order_edges)
+                     war_edges, order_edges, strategy=sched_strategy)
     tm["schedule"] = time.perf_counter() - t0
+    if check:
+        validate_schedule(sched, proc_instrs, core_of_proc, hw,
+                          send_dst_core, war_edges, order_edges)
 
     # ---- memory placement (resolve relocations) --------------------------
     spad_base: Dict[str, int] = {}
@@ -537,8 +564,13 @@ def compile_circuit(circuit: Circuit,
                 (owner_core[mname], spad_base[mname], m.depth * m.stride,
                  False))
         for mname, m in low.mems.items()}
+    crit_lb = sched.stats.get("crit_path_lb", 0)
     stats.update({
         "optimize": bool(optimize),
+        "sched_strategy": sched_strategy,
+        "vcpl_over_lb": round(sched.vcpl / crit_lb, 4) if crit_lb else 0.0,
+        "sched_seconds": round(tm.get("schedule", 0.0), 6),
+        **remat_stats,
         "instrs_lowered": instrs_lowered,
         "instrs_opt": len(low.instrs),
         "opt_passes": opt_records,

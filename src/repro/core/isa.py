@@ -163,3 +163,11 @@ class HardwareConfig:
 
     def xy_core(self, x: int, y: int) -> int:
         return (y % self.grid_height) * self.grid_width + (x % self.grid_width)
+
+    def route_hops(self, src: int, dst: int) -> int:
+        """Hop count of the dimension-ordered (+x then +y) route on the
+        uni-directional torus; 0 for a self-send (a local move that never
+        touches the NoC)."""
+        sx, sy = self.core_xy(src)
+        dx, dy = self.core_xy(dst)
+        return (dx - sx) % self.grid_width + (dy - sy) % self.grid_height

@@ -64,6 +64,47 @@ def _resolve(subst: Dict[int, int], srcs: Tuple[int, ...]) -> Tuple[int, ...]:
     return tuple(_find(subst, s) for s in srcs)
 
 
+def pure_backward_cone(low: Lowered, vreg: int, max_size: int,
+                       defs: Optional[Dict[int, int]] = None):
+    """Bounded backward closure of the pure expression computing ``vreg``.
+
+    Walks def-use chains from ``vreg``'s defining instruction. Returns
+    ``(instr_indices, state_reads)`` — frozensets of instruction indices
+    and of current-register leaves the cone reads — when the whole cone is
+    :data:`~repro.core.isa.PURE_OPS` and at most ``max_size`` instructions;
+    ``None`` when the cone is impure (loads, sends, side effects), too
+    large, or ``vreg`` has no defining instruction. Constant / input /
+    Reloc leaves are free (their init is materialized on every core by
+    regalloc) and are not reported. Used by
+    :mod:`~repro.core.remat` to price rematerialization candidates."""
+    if defs is None:
+        defs = low.defs()
+    d0 = defs.get(vreg)
+    if d0 is None:
+        return None
+    state = low.state_vregs()
+    instrs: set = set()
+    reads: set = set()
+    stack = [d0]
+    while stack:
+        idx = stack.pop()
+        if idx in instrs:
+            continue
+        if low.instrs[idx].op not in PURE_OPS:
+            return None
+        instrs.add(idx)
+        if len(instrs) > max_size:
+            return None
+        for s in low.instrs[idx].srcs:
+            dd = defs.get(s)
+            if dd is not None:
+                if dd not in instrs:
+                    stack.append(dd)
+            elif s in state:
+                reads.add(s)
+    return frozenset(instrs), frozenset(reads)
+
+
 class _ConstPool:
     """Reverse map value -> const vreg; materializes new leaves on demand."""
 

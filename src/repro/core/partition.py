@@ -57,6 +57,16 @@ class Partition:
     proc_mems: List[List[str]]         # local memories owned per process
     sends: List[SendEdge]
     local_commits: List[Tuple[int, int, int]]  # (proc, nxt_vreg, cur_vreg)
+    # commits added by core.remat: these always commit via an explicit MOV
+    # (never the Wimmer-Franz register share) so the rematerialized compute
+    # can float early in the schedule instead of being WAR-serialized
+    # behind every local reader of the register
+    remat_commits: Set[Tuple[int, int, int]] = field(default_factory=set)
+    # (proc, cur_vreg) state leaves read by rematerialized cones: their
+    # commits are likewise forced to MOV, otherwise the WAR edge
+    # reader-before-def would splice the (low-priority) rematerialized
+    # compute into the middle of the proc's critical chain
+    remat_reads: Set[Tuple[int, int]] = field(default_factory=set)
     # diagnostics
     split_count: int = 0
     merge_steps: int = 0

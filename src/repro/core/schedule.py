@@ -18,11 +18,32 @@ the core pipeline and the uni-directional 2D torus NoC:
   * received messages cost one epilogue slot each at the destination
     (they are replayed from instruction memory, §5.2).
 
+Two strategies share this machine model:
+
+  * ``"greedy"`` — the original scheduler, kept bit-identical for
+    differential testing: priority is the longest latency path to a leaf,
+    computed once; candidates are re-sorted every slot; a SEND that cannot
+    claim its route simply retries next cycle.
+  * ``"slack"`` (default) — a slack-driven list scheduler: per-instruction
+    ASAP/ALAP times give mobility (ALAP - ASAP), the dynamic priority
+    (tie-broken by successor fanout), maintained in per-process ready heaps
+    so each instruction is examined O(log n) times instead of once per
+    slot.  A SEND searches its route for the *earliest* collision-free slot
+    and reserves links + arrival ahead of time rather than retrying, and
+    its priority is biased by downstream receiver slack so cross-core
+    critical paths drain first.  The pass runs under two priority
+    functions (mobility-biased and pure critical-path height) and keeps
+    whichever schedule lands the lower VCPL.
+
+A SEND whose source and destination core coincide is a *local move*: it
+claims no NoC link and no arrival slot and costs no epilogue replay.
+
 The scheduler reports **VCPL** — machine slots per simulated RTL cycle — the
 paper's exact performance model for a deterministic machine.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -30,6 +51,8 @@ from .isa import HardwareConfig, Instr, Op
 
 RAW = 0
 ORDER = 1  # issue-order edge (memory order, WAR): latency 1
+
+STRATEGIES = ("greedy", "slack")
 
 
 @dataclass
@@ -51,7 +74,9 @@ class ScheduleResult:
 
 def _route(hw: HardwareConfig, src: int, dst: int) -> List[Tuple[str, int, int]]:
     """Dimension-ordered route on the uni-directional torus: +x then +y.
-    Returns a list of directed links ('x'|'y', x, y) traversed in order."""
+    Returns a list of directed links ('x'|'y', x, y) traversed in order.
+    A src == dst route is empty: a self-send is a local move that never
+    touches the NoC."""
     sx, sy = hw.core_xy(src)
     dx, dy = hw.core_xy(dst)
     links: List[Tuple[str, int, int]] = []
@@ -62,28 +87,14 @@ def _route(hw: HardwareConfig, src: int, dst: int) -> List[Tuple[str, int, int]]
     while y != dy:
         links.append(("y", x, y))
         y = (y + 1) % hw.grid_height
-    if not links:  # self-send (possible after merging); one local hop
-        links.append(("x", x, y))
     return links
 
 
-def schedule(core_instrs: List[List[Instr]],
-             core_of_proc: List[int],
-             hw: HardwareConfig,
-             send_dst_core: Dict[int, int],
-             war_edges: List[List[Tuple[int, int]]],
-             order_edges: List[List[Tuple[int, int]]]) -> ScheduleResult:
-    """Schedule every process's instruction list onto its core.
-
-    ``core_instrs[p]`` is process p's topo-ordered instruction list (SENDs
-    included). ``war_edges[p]`` / ``order_edges[p]`` are (src_idx, dst_idx)
-    issue-order constraints. ``send_dst_core`` maps id(instr) -> dst core.
-    """
-    ncores = hw.num_cores
-    L = hw.raw_latency
-
-    # per-process dependence structures
-    preds: List[List[List[Tuple[int, int]]]] = []   # p -> i -> [(j, kind)]
+def _build_deps(core_instrs: List[List[Instr]],
+                war_edges: List[List[Tuple[int, int]]],
+                order_edges: List[List[Tuple[int, int]]]):
+    """Per-process dependence graph: preds[p][i] / succs[p][i] = [(j, kind)]."""
+    preds: List[List[List[Tuple[int, int]]]] = []
     succs: List[List[List[Tuple[int, int]]]] = []
     for p, instrs in enumerate(core_instrs):
         defs: Dict[int, int] = {}
@@ -103,6 +114,30 @@ def schedule(core_instrs: List[List[Instr]],
             su[a].append((b, ORDER))
         preds.append(pr)
         succs.append(su)
+    return preds, succs
+
+
+def schedule(core_instrs: List[List[Instr]],
+             core_of_proc: List[int],
+             hw: HardwareConfig,
+             send_dst_core: Dict[int, int],
+             war_edges: List[List[Tuple[int, int]]],
+             order_edges: List[List[Tuple[int, int]]],
+             strategy: str = "slack") -> ScheduleResult:
+    """Schedule every process's instruction list onto its core.
+
+    ``core_instrs[p]`` is process p's topo-ordered instruction list (SENDs
+    included). ``war_edges[p]`` / ``order_edges[p]`` are (src_idx, dst_idx)
+    issue-order constraints. ``send_dst_core`` maps id(instr) -> dst core.
+    ``strategy`` selects the scheduling policy (see module docstring).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown sched strategy {strategy!r}; choose from {STRATEGIES}")
+    ncores = hw.num_cores
+    L = hw.raw_latency
+
+    preds, succs = _build_deps(core_instrs, war_edges, order_edges)
 
     # priority = longest latency path to any leaf (critical path first)
     prio: List[List[int]] = []
@@ -131,7 +166,48 @@ def schedule(core_instrs: List[List[Instr]],
             crit_lb = max(crit_lb, max(prio[p]) + 1)
     crit_path_lb = max([crit_lb] + list(core_load.values()))
 
-    # scheduling state
+    sched_prio = None
+    if strategy == "greedy":
+        passres = _greedy_pass(core_instrs, core_of_proc, hw, send_dst_core,
+                               preds, succs, prio, ncores)
+    else:
+        # Two cheap list-scheduling passes over the same machine model:
+        # mobility priority wins on communication-heavy graphs (it drains
+        # low-slack cross-core chains first), pure height priority on
+        # compute-dense ones. Keep whichever lands the lower VCPL
+        # (mobility on ties — it is the primary policy).
+        best = None
+        for pr in ("mobility", "height"):
+            pres = _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
+                               preds, succs, ncores, core_load, pr)
+            if best is None or _pass_vcpl(pres) < _pass_vcpl(best[0]):
+                best = (pres, pr)
+        passres, sched_prio = best
+    core_slots, core_sends, recv_count, last_arrival = passres
+
+    total = sum(len(ci) for ci in core_instrs)
+    res = _finish(core_slots, core_sends, recv_count, last_arrival, ncores,
+                  total, crit_path_lb, hw, strategy)
+    if sched_prio is not None:
+        res.stats["sched_prio"] = sched_prio
+    return res
+
+
+def _pass_vcpl(passres) -> int:
+    """VCPL of a raw scheduling pass result, before padding/stats."""
+    core_slots, _sends, recv_count, last_arrival = passres
+    t_comp = max([len(s) for s in core_slots] + [last_arrival], default=0)
+    return t_comp + (max(recv_count) if recv_count else 0)
+
+
+# ----------------------------------------------------------------------
+# greedy pass — the original scheduler, frozen for differential testing
+# ----------------------------------------------------------------------
+
+def _greedy_pass(core_instrs, core_of_proc, hw, send_dst_core,
+                 preds, succs, prio, ncores):
+    L = hw.raw_latency
+
     n_sched: List[int] = [0] * len(core_instrs)
     sched_slot: List[List[int]] = [[-1] * len(ci) for ci in core_instrs]
     npreds_left = [[len(pp) for pp in preds[p]] for p in range(len(preds))]
@@ -170,19 +246,23 @@ def schedule(core_instrs: List[List[Instr]],
                 if ins.op == Op.SEND:
                     dst = send_dst_core[id(ins)]
                     links = _route(hw, c, dst)
-                    slots_needed = [t + 1 + k * hw.send_latency
-                                    for k in range(len(links))]
-                    arrive = t + 1 + len(links) * hw.send_latency
-                    if any(s in link_busy.get(lk, set())
-                           for lk, s in zip(links, slots_needed)):
-                        continue
-                    if arrive in arrival_busy.get(dst, set()):
-                        continue
-                    for lk, s in zip(links, slots_needed):
-                        link_busy.setdefault(lk, set()).add(s)
-                    arrival_busy.setdefault(dst, set()).add(arrive)
-                    recv_count[dst] += 1
-                    last_arrival = max(last_arrival, arrive)
+                    if links:
+                        slots_needed = [t + 1 + k * hw.send_latency
+                                        for k in range(len(links))]
+                        arrive = t + 1 + len(links) * hw.send_latency
+                        if any(s in link_busy.get(lk, set())
+                               for lk, s in zip(links, slots_needed)):
+                            continue
+                        if arrive in arrival_busy.get(dst, set()):
+                            continue
+                        for lk, s in zip(links, slots_needed):
+                            link_busy.setdefault(lk, set()).add(s)
+                        arrival_busy.setdefault(dst, set()).add(arrive)
+                        recv_count[dst] += 1
+                        last_arrival = max(last_arrival, arrive)
+                    else:
+                        # self-send: local move, no NoC claims, no epilogue
+                        last_arrival = max(last_arrival, t + 1)
                     core_sends[c].append((t, ins))
                 issued = i
                 break
@@ -204,6 +284,201 @@ def schedule(core_instrs: List[List[Instr]],
                         ready[p].append(j)
         t += 1
 
+    return core_slots, core_sends, recv_count, last_arrival
+
+
+# ----------------------------------------------------------------------
+# slack pass — ASAP/ALAP mobility heaps + earliest-slot SEND reservation
+# ----------------------------------------------------------------------
+
+def _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
+                preds, succs, ncores, core_load, prio_mode="mobility"):
+    L = hw.raw_latency
+    nproc = len(core_instrs)
+
+    # Route (and receiver pressure) per SEND, computed once.
+    routes: Dict[int, List[Tuple[str, int, int]]] = {}
+    route_dst: Dict[int, int] = {}
+    inbound = [0] * ncores
+    for p, instrs in enumerate(core_instrs):
+        c = core_of_proc[p]
+        for ins in instrs:
+            if ins.op == Op.SEND:
+                dst = send_dst_core[id(ins)]
+                routes[id(ins)] = _route(hw, c, dst)
+                route_dst[id(ins)] = dst
+                if dst != c:
+                    inbound[dst] += 1
+
+    # ASAP (earliest data-ready slot) and height (latency-weighted distance
+    # to schedule exit, where a SEND's exit includes its route flight time).
+    asap_all: List[List[int]] = []
+    height_all: List[List[int]] = []
+    T_est = max(core_load.values(), default=0)
+    for p, instrs in enumerate(core_instrs):
+        n = len(instrs)
+        asap = [0] * n
+        for i in range(n):
+            best = 0
+            for (j, kind) in preds[p][i]:
+                lat = L if kind == RAW else 1
+                if asap[j] + lat > best:
+                    best = asap[j] + lat
+            asap[i] = best
+        hgt = [1] * n
+        for i in range(n - 1, -1, -1):
+            ins = instrs[i]
+            best = 1
+            if ins.op == Op.SEND:
+                best = 1 + len(routes[id(ins)]) * hw.send_latency
+            for (j, kind) in succs[p][i]:
+                lat = L if kind == RAW else 1
+                if lat + hgt[j] > best:
+                    best = lat + hgt[j]
+            hgt[i] = best
+        if n:
+            T_est = max(T_est, max(asap[i] + hgt[i] for i in range(n)))
+        asap_all.append(asap)
+        height_all.append(hgt)
+
+    # "mobility" priority: mobility = ALAP - ASAP = (T_est - height) - ASAP,
+    # least-slack first, tie-broken by successor fanout; a SEND's mobility
+    # is additionally capped by its receiver's slack (how much room the
+    # destination core has before its stream + epilogue reach T_est), so
+    # messages into hot receivers drain first. "height" priority: plain
+    # critical-path (longest latency-weighted distance to exit) first.
+    def _prio_key(p: int, i: int):
+        if prio_mode == "height":
+            return (-height_all[p][i], -len(succs[p][i]), i)
+        ins = core_instrs[p][i]
+        mob = (T_est - height_all[p][i]) - asap_all[p][i]
+        if ins.op == Op.SEND:
+            dst = route_dst[id(ins)]
+            recv_slack = T_est - core_load.get(dst, 0) - inbound[dst]
+            mob = min(mob, max(0, recv_slack))
+        return (mob, -len(succs[p][i]), i)
+
+    npreds_left = [[len(pp) for pp in preds[p]] for p in range(nproc)]
+    # pend[p]: (data-ready slot, i) — promoted into ready[p] at that slot;
+    # ready[p]: (mobility, -fanout, i) min-heaps.
+    pend: List[List[Tuple[int, int]]] = [[] for _ in range(nproc)]
+    ready: List[List[Tuple[int, int, int]]] = [[] for _ in range(nproc)]
+    for p, instrs in enumerate(core_instrs):
+        for i in range(len(instrs)):
+            if npreds_left[p][i] == 0:
+                heapq.heappush(pend[p], (0, i))
+
+    link_busy: Dict[Tuple[str, int, int], Set[int]] = {}
+    arrival_busy: Dict[int, Set[int]] = {}
+    recv_count = [0] * ncores
+    core_slots: List[List[Optional[Instr]]] = [[] for _ in range(ncores)]
+    core_sends: List[List[Tuple[int, Instr]]] = [[] for _ in range(ncores)]
+    # reserved[c][slot] = SEND committed to a future slot on core c
+    reserved: List[Dict[int, Instr]] = [dict() for _ in range(ncores)]
+    last_arrival = 0
+
+    total = sum(len(ci) for ci in core_instrs)
+    max_slots = 4 * total + 64 + sum(len(ci) == 0 for ci in core_instrs)
+
+    def _mark_scheduled(p: int, i: int, slot: int) -> None:
+        for (j, kind) in succs[p][i]:
+            npreds_left[p][j] -= 1
+            lat = L if kind == RAW else 1
+            rt = slot + lat
+            prev = sched_rt[p].get(j, 0)
+            if rt > prev:
+                sched_rt[p][j] = rt
+            if npreds_left[p][j] == 0:
+                heapq.heappush(pend[p], (sched_rt[p].get(j, 0), j))
+
+    sched_rt: List[Dict[int, int]] = [dict() for _ in range(nproc)]
+
+    def _reserve_send(p: int, i: int, ins: Instr, c: int, t: int) -> int:
+        """Earliest collision-free slot >= t for this SEND: core slot free,
+        every route link free at its flight slot, arrival unique at dst.
+        Claims everything immediately and returns the chosen slot."""
+        nonlocal last_arrival
+        links = routes[id(ins)]
+        dst = route_dst[id(ins)]
+        nhops = len(links)
+        ts = t
+        while True:
+            if ts > max_slots:
+                raise RuntimeError("scheduler failed to converge")
+            if ts in reserved[c]:
+                ts += 1
+                continue
+            if not links:          # self-send: local move, always placeable
+                last_arrival = max(last_arrival, ts + 1)
+                return ts
+            slots_needed = [ts + 1 + k * hw.send_latency
+                            for k in range(nhops)]
+            arrive = ts + 1 + nhops * hw.send_latency
+            if (any(s in link_busy.get(lk, set())
+                    for lk, s in zip(links, slots_needed))
+                    or arrive in arrival_busy.get(dst, set())):
+                ts += 1
+                continue
+            for lk, s in zip(links, slots_needed):
+                link_busy.setdefault(lk, set()).add(s)
+            arrival_busy.setdefault(dst, set()).add(arrive)
+            recv_count[dst] += 1
+            last_arrival = max(last_arrival, arrive)
+            return ts
+
+    emitted = 0
+    t = 0
+    proc_list = list(range(nproc))
+    while emitted < total:
+        if t > max_slots:
+            raise RuntimeError("scheduler failed to converge")
+        for p in proc_list:
+            c = core_of_proc[p]
+            instrs = core_instrs[p]
+            res = reserved[c].pop(t, None)
+            if res is not None:
+                while len(core_slots[c]) < t:
+                    core_slots[c].append(None)
+                core_slots[c].append(res)
+                emitted += 1
+                continue
+            pp, rp = pend[p], ready[p]
+            while pp and pp[0][0] <= t:
+                _, i = heapq.heappop(pp)
+                heapq.heappush(rp, _prio_key(p, i))
+            issued: Optional[Instr] = None
+            while rp:
+                _, _, i = heapq.heappop(rp)
+                ins = instrs[i]
+                if ins.op == Op.SEND:
+                    ts = _reserve_send(p, i, ins, c, t)
+                    core_sends[c].append((ts, ins))
+                    _mark_scheduled(p, i, ts)
+                    if ts == t:
+                        issued = ins
+                        emitted += 1
+                        break
+                    reserved[c][ts] = ins
+                    continue   # send parked in the future; keep looking
+                _mark_scheduled(p, i, t)
+                issued = ins
+                emitted += 1
+                break
+            if issued is not None:
+                while len(core_slots[c]) < t:
+                    core_slots[c].append(None)
+                core_slots[c].append(issued)
+        t += 1
+
+    return core_slots, core_sends, recv_count, last_arrival
+
+
+# ----------------------------------------------------------------------
+# shared epilogue: padding, VCPL, stats
+# ----------------------------------------------------------------------
+
+def _finish(core_slots, core_sends, recv_count, last_arrival, ncores, total,
+            crit_path_lb, hw, strategy) -> ScheduleResult:
     t_compute = max((len(s) for s in core_slots), default=0)
     t_compute = max(t_compute, last_arrival)
     for s in core_slots:
@@ -214,9 +489,22 @@ def schedule(core_instrs: List[List[Instr]],
     vcpl = t_compute + epilogue
 
     nops = sum(1 for s in core_slots for x in s if x is None)
+    for sends in core_sends:
+        sends.sort(key=lambda e: e[0])
     sends_n = sum(len(s) for s in core_sends)
     cores = [CoreProgram(core_slots[c], recv_count[c], core_sends[c])
              for c in range(ncores)]
+
+    # per-core utilization over *used* cores (any instr or any receive)
+    used = [c for c in range(ncores)
+            if recv_count[c] or any(x is not None for x in core_slots[c])]
+    loads = [sum(x is not None for x in core_slots[c]) for c in used]
+    hist = [0] * 10
+    if t_compute:
+        for ld in loads:
+            dens = 1.0 - ld / t_compute
+            hist[min(9, int(dens * 10))] += 1
+
     res = ScheduleResult(cores, t_compute, vcpl, stats={
         "t_compute": t_compute,
         "epilogue": epilogue,
@@ -227,5 +515,118 @@ def schedule(core_instrs: List[List[Instr]],
         "crit_path_lb": crit_path_lb,
         "sched_minimal": t_compute == crit_path_lb,
         "imem_overflow": max(0, vcpl - hw.imem_slots),
+        "sched_strategy": strategy,
+        "cores_used": len(used),
+        "core_load_max": max(loads, default=0),
+        "core_load_mean": round(sum(loads) / len(loads), 3) if loads else 0.0,
+        "nop_density_hist": hist,
+        "epilogue_share": round(epilogue / vcpl, 4) if vcpl else 0.0,
     })
     return res
+
+
+# ----------------------------------------------------------------------
+# independent validator
+# ----------------------------------------------------------------------
+
+def validate_schedule(res: ScheduleResult,
+                      core_instrs: List[List[Instr]],
+                      core_of_proc: List[int],
+                      hw: HardwareConfig,
+                      send_dst_core: Dict[int, int],
+                      war_edges: List[List[Tuple[int, int]]],
+                      order_edges: List[List[Tuple[int, int]]]) -> Dict[str, int]:
+    """Independently re-check a :class:`ScheduleResult` against the machine
+    model: every instruction placed exactly once on its process's core, RAW
+    def->use distance >= ``hw.raw_latency``, WAR/memory-order edges strictly
+    respected, NoC link slots collision-free, arrival slots unique per
+    destination and within ``t_compute``, receive counts and VCPL
+    consistent. Raises :class:`ValueError` on the first violation; returns
+    summary counts when the schedule is valid."""
+    L = hw.raw_latency
+    # the partitioner duplicates instruction *objects* across processes
+    # (cone duplication), so placement is keyed per core, where each object
+    # occupies exactly one slot
+    placed: List[Dict[int, int]] = [{} for _ in res.cores]
+    for c, cp in enumerate(res.cores):
+        if len(cp.slots) != res.t_compute:
+            raise ValueError(
+                f"core {c}: stream length {len(cp.slots)} != t_compute "
+                f"{res.t_compute}")
+        for s, ins in enumerate(cp.slots):
+            if ins is None:
+                continue
+            if id(ins) in placed[c]:
+                raise ValueError(
+                    f"instruction placed twice on core {c}: {ins!r}")
+            placed[c][id(ins)] = s
+
+    send_ids: Set[int] = set()
+    n_placed = sum(len(m) for m in placed)
+    for p, instrs in enumerate(core_instrs):
+        c = core_of_proc[p]
+        defs: Dict[int, int] = {}
+        slots: List[int] = []
+        for i, ins in enumerate(instrs):
+            slot = placed[c].get(id(ins))
+            if slot is None:
+                raise ValueError(f"proc {p} instr {i} missing from core {c}")
+            slots.append(slot)
+            for src in ins.srcs:
+                d = defs.get(src)
+                if d is not None and slot - slots[d] < L:
+                    raise ValueError(
+                        f"RAW violation proc {p}: {d}->{i} distance "
+                        f"{slot - slots[d]} < {L}")
+            w = ins.writes()
+            if w is not None and w != 0:
+                defs[w] = i
+            if ins.op == Op.SEND:
+                send_ids.add(id(ins))
+        for (a, b) in war_edges[p] + order_edges[p]:
+            if slots[b] <= slots[a]:
+                raise ValueError(
+                    f"order violation proc {p}: {a}(slot {slots[a]}) !< "
+                    f"{b}(slot {slots[b]})")
+
+    link_busy: Dict[Tuple[str, int, int], Set[int]] = {}
+    arrival_busy: Dict[int, Set[int]] = {}
+    recv = [0] * hw.num_cores
+    listed: Set[int] = set()
+    for c, cp in enumerate(res.cores):
+        for (ts, ins) in cp.sends:
+            if placed[c].get(id(ins)) != ts:
+                raise ValueError(
+                    f"send list slot ({c},{ts}) disagrees with placement "
+                    f"{placed[c].get(id(ins))}")
+            listed.add(id(ins))
+            dst = send_dst_core[id(ins)]
+            links = _route(hw, c, dst)
+            if not links:
+                continue           # local move: no NoC claims, no replay
+            for k, lk in enumerate(links):
+                sl = ts + 1 + k * hw.send_latency
+                if sl in link_busy.setdefault(lk, set()):
+                    raise ValueError(f"link collision on {lk} at slot {sl}")
+                link_busy[lk].add(sl)
+            arrive = ts + 1 + len(links) * hw.send_latency
+            if arrive in arrival_busy.setdefault(dst, set()):
+                raise ValueError(
+                    f"arrival collision at core {dst} slot {arrive}")
+            arrival_busy[dst].add(arrive)
+            if arrive > res.t_compute:
+                raise ValueError(
+                    f"arrival {arrive} past t_compute {res.t_compute}")
+            recv[dst] += 1
+    if listed != send_ids:
+        raise ValueError("send lists do not cover exactly the SEND instrs")
+    for c, cp in enumerate(res.cores):
+        if cp.recv_count != recv[c]:
+            raise ValueError(
+                f"core {c} recv_count {cp.recv_count} != derived {recv[c]}")
+    epilogue = max(recv) if recv else 0
+    if res.vcpl != res.t_compute + epilogue:
+        raise ValueError(
+            f"vcpl {res.vcpl} != t_compute {res.t_compute} + epilogue "
+            f"{epilogue}")
+    return {"instrs": n_placed, "sends": len(send_ids)}

@@ -13,7 +13,8 @@ The cache key is a SHA-256 over:
   latched input values; two builds of the same design collide, any
   semantic difference does not),
 * every :class:`~repro.core.isa.HardwareConfig` field,
-* the compiler options (``strategy``, ``use_luts``, ``optimize``),
+* the compiler options (``strategy``, ``use_luts``, ``optimize``,
+  ``sched_strategy``),
 * the artifact :data:`~repro.sim.artifact.FORMAT_VERSION` (a schema bump
   silently invalidates old entries — they just miss).
 
@@ -47,7 +48,7 @@ def default_cache_dir() -> Path:
 
 def cache_key(circuit: Circuit, hw: HardwareConfig, *,
               strategy: str = "balanced", use_luts: bool = True,
-              optimize: bool = True) -> str:
+              optimize: bool = True, sched_strategy: str = "slack") -> str:
     """Deterministic key for one (circuit, hardware, options) request."""
     payload = json.dumps({
         "format_version": FORMAT_VERSION,
@@ -56,6 +57,7 @@ def cache_key(circuit: Circuit, hw: HardwareConfig, *,
         "strategy": strategy,
         "use_luts": bool(use_luts),
         "optimize": bool(optimize),
+        "sched_strategy": sched_strategy,
     }, sort_keys=True)
     return hashlib.sha256(payload.encode("utf-8")).hexdigest()
 

@@ -250,7 +250,7 @@ def _resolve_source(source, scale: str, seeds, overrides):
 def compile(source, hw: Optional[HardwareConfig] = None, *,
             scale: str = "full", seeds: Optional[Sequence[int]] = None,
             optimize: bool = True, use_luts: bool = True,
-            strategy: str = "balanced",
+            strategy: str = "balanced", sched_strategy: str = "slack",
             cache: Union[bool, str, Path, CompileCache, None] = None,
             shard_batch: Optional[bool] = None,
             **overrides) -> Simulation:
@@ -268,6 +268,10 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     (``[D, B/D]`` elements per device); ``False`` pins the single-device
     vmapped engine; the default (None) auto-selects sharding when more
     than one device is visible and B >= 2*D.
+
+    ``sched_strategy`` selects the scheduler: ``"slack"`` (default, the
+    slack-driven list scheduler with rematerialization) or ``"greedy"``
+    (the frozen differential baseline); see ``core.schedule``.
     """
     bench, circuit = _resolve_source(source, scale, seeds, overrides)
     if bench is not None:
@@ -279,11 +283,12 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     key = None
     if cc is not None:
         key = cache_key(circuit, hw, strategy=strategy, use_luts=use_luts,
-                        optimize=optimize)
+                        optimize=optimize, sched_strategy=sched_strategy)
         prog = cc.load(key)
     if prog is None:
         prog = compile_circuit(circuit, hw, strategy=strategy,
-                               use_luts=use_luts, optimize=optimize)
+                               use_luts=use_luts, optimize=optimize,
+                               sched_strategy=sched_strategy)
         prog.stats["cache_hit"] = False
         if cc is not None:
             cc.store(key, prog)

@@ -1,0 +1,179 @@
+"""The scheduler (PR 6): both strategies validate against the machine
+model on every bench circuit, the slack scheduler's utilization stats are
+consistent, self-sends are local moves, and random dependence graphs
+schedule correctly under both policies (hypothesis property when
+available, a seeded sweep always).
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.circuits import CIRCUITS, build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig, Instr, Op
+from repro.core.schedule import (STRATEGIES, schedule, validate_schedule,
+                                 _route)
+
+HW = HardwareConfig(grid_width=5, grid_height=5)
+
+
+# ----------------------------------------------------------------------
+# all nine circuits x both strategies, validated against the machine model
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def programs():
+    """Every bench circuit compiled under both strategies with the
+    independent schedule validator enabled (check=True re-verifies RAW
+    distances, order edges, link/arrival collision freedom and VCPL)."""
+    out = {}
+    for name in sorted(CIRCUITS):
+        c = build(name).circuit
+        for strat in STRATEGIES:
+            out[name, strat] = compile_circuit(
+                c, HW, sched_strategy=strat, check=True)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CIRCUITS))
+@pytest.mark.parametrize("strat", STRATEGIES)
+def test_circuit_schedule_validates(programs, name, strat):
+    prog = programs[name, strat]
+    st = prog.stats
+    assert st["sched_strategy"] == strat
+    assert st["vcpl"] == st["t_compute"] + st["epilogue"]
+    assert st["t_compute"] >= st["crit_path_lb"]
+    assert st["vcpl_over_lb"] >= 1.0
+    if strat == "slack":
+        assert st["sched_prio"] in ("mobility", "height")
+        assert st["remat_sends"] >= 0
+    else:
+        # greedy path is the frozen baseline: no rematerialization
+        assert st["remat_sends"] == 0
+
+
+@pytest.mark.parametrize("name", sorted(CIRCUITS))
+def test_slack_never_ships_more_sends(programs, name):
+    """Rematerialization only deletes communication, never adds it."""
+    assert (programs[name, "slack"].stats["sends"]
+            <= programs[name, "greedy"].stats["sends"])
+
+
+@pytest.mark.parametrize("name", sorted(CIRCUITS))
+def test_utilization_stats_consistent(programs, name):
+    for strat in STRATEGIES:
+        st = programs[name, strat].stats
+        assert st["cores_used"] >= 1
+        assert sum(st["nop_density_hist"]) == st["cores_used"]
+        assert st["core_load_max"] <= st["t_compute"]
+        assert 0.0 < st["core_load_mean"] <= st["core_load_max"]
+        assert 0.0 <= st["epilogue_share"] < 1.0
+
+
+# ----------------------------------------------------------------------
+# self-sends are local moves
+# ----------------------------------------------------------------------
+
+def test_route_self_is_empty():
+    hw = HardwareConfig(grid_width=3, grid_height=3)
+    for c in range(hw.num_cores):
+        assert _route(hw, c, c) == []
+
+
+@pytest.mark.parametrize("strat", STRATEGIES)
+def test_self_send_claims_no_noc(strat):
+    """A SEND whose src and dst core coincide costs an issue slot but no
+    link slots, no arrival slot, and no epilogue replay."""
+    hw = HardwareConfig(grid_width=2, grid_height=2)
+    a = Instr(Op.ADD, dst=1, srcs=())
+    s = Instr(Op.SEND, dst=2, srcs=(1,))
+    core_instrs = [[a, s]]
+    send_dst_core = {id(s): 0}          # proc 0 lives on core 0
+    res = schedule(core_instrs, [0], hw, send_dst_core,
+                   [[]], [[]], strategy=strat)
+    validate_schedule(res, core_instrs, [0], hw, send_dst_core, [[]], [[]])
+    assert res.cores[0].recv_count == 0
+    assert res.vcpl == res.t_compute        # no epilogue
+    assert len(res.cores[0].sends) == 1
+
+
+# ----------------------------------------------------------------------
+# random dependence graphs: both strategies produce valid schedules
+# ----------------------------------------------------------------------
+
+def _random_problem(rnd: random.Random):
+    """A small random multi-process dependence graph: pure ops reading
+    earlier defs, SENDs to arbitrary cores (self included), random WAR and
+    memory-order edges."""
+    hw = HardwareConfig(grid_width=2, grid_height=2)
+    nproc = rnd.randint(1, hw.num_cores)
+    core_of_proc = list(range(nproc))
+    vreg = 1                                  # vreg 0 is the constant zero
+    core_instrs, war_edges, order_edges = [], [], []
+    send_dst_core = {}
+    for _p in range(nproc):
+        n = rnd.randint(0, 12)
+        instrs, defined = [], []
+        for _i in range(n):
+            if defined and rnd.random() < 0.3:
+                ins = Instr(Op.SEND, dst=vreg, srcs=(rnd.choice(defined),))
+                send_dst_core[id(ins)] = rnd.randrange(hw.num_cores)
+            else:
+                k = rnd.randint(0, min(2, len(defined)))
+                ins = Instr(Op.ADD, dst=vreg,
+                            srcs=tuple(rnd.sample(defined, k)))
+                defined.append(vreg)
+            vreg += 1
+            instrs.append(ins)
+        war, order = [], []
+        if n >= 2:
+            for _ in range(rnd.randint(0, n)):
+                a2 = rnd.randrange(n - 1)
+                b2 = rnd.randrange(a2 + 1, n)
+                (war if rnd.random() < 0.5 else order).append((a2, b2))
+        core_instrs.append(instrs)
+        war_edges.append(war)
+        order_edges.append(order)
+    return hw, core_instrs, core_of_proc, send_dst_core, war_edges, order_edges
+
+
+def _check_random(seed: int) -> None:
+    rnd = random.Random(seed)
+    (hw, core_instrs, core_of_proc, send_dst_core,
+     war_edges, order_edges) = _random_problem(rnd)
+    vcpls = {}
+    for strat in STRATEGIES:
+        res = schedule(core_instrs, core_of_proc, hw, send_dst_core,
+                       war_edges, order_edges, strategy=strat)
+        validate_schedule(res, core_instrs, core_of_proc, hw,
+                          send_dst_core, war_edges, order_edges)
+        assert res.t_compute >= res.stats["crit_path_lb"]
+        vcpls[strat] = res.vcpl
+    # both strategies schedule the same instruction set; neither may
+    # blow past the trivial serial bound
+    serial = sum(len(ci) for ci in core_instrs)
+    lb = res.stats["crit_path_lb"]
+    for v in vcpls.values():
+        assert v <= 4 * max(serial, lb) + 64
+
+
+def test_random_dependence_graphs_seeded():
+    for seed in range(60):
+        _check_random(seed)
+
+
+try:
+    from hypothesis import given, settings, HealthCheck
+    import hypothesis.strategies as st_
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st_.integers(0, 2**32 - 1))
+    def test_random_dependence_graphs_property(seed):
+        _check_random(seed)
+except ImportError:  # pragma: no cover - hypothesis optional
+    @pytest.mark.skip(reason="hypothesis not installed in this environment")
+    def test_random_dependence_graphs_property():
+        pass
