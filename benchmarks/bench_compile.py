@@ -30,6 +30,14 @@ partition-aware rematerialization): ``vcpl_sched_{greedy,slack}``,
 schedule's per-core utilization (``util_*``: NOp-density histogram,
 max/mean core load, epilogue share).
 
+Since communication-aware placement landed (``core.place``), each circuit
+also records the **communication profile of the shipped program** —
+``n_sends``, ``total_hops`` (dimension-ordered route hops summed over the
+exchange table), ``mean_hops_per_send`` — plus the per-placement-strategy
+VCPL (``vcpl_place_anneal`` vs ``vcpl_place_identity``, same slack
+scheduler) and which geometry the best-of-two pick shipped
+(``place_pick``).
+
 Since the ``repro.sim`` facade landed, each circuit also records
 **cold-vs-warm compile time** through the on-disk compile cache
 (``compile_s_cold`` / ``compile_s_warm`` / ``cache_speedup`` /
@@ -58,6 +66,12 @@ from repro.core import HardwareConfig
 HW_RUN = HardwareConfig(grid_width=5, grid_height=5)     # throughput grid
 HW_PAPER = HardwareConfig(grid_width=15, grid_height=15)  # compile metrics
 REPS = 3
+
+
+def _program_hops(p) -> int:
+    """Total dimension-ordered route hops of the shipped exchange table."""
+    return sum(p.hw.route_hops(int(s), int(d))
+               for s, d in zip(p.xchg_src_core, p.xchg_dst_core))
 
 
 def _rate(prog, n: int, reps: int) -> float:
@@ -113,7 +127,8 @@ def bench_circuit(nm: str, scale: str, reps: int) -> dict:
     # scheduler strategy comparison (PR 6): same middle-end output through
     # the frozen greedy scheduler vs the slack-driven default (ASAP/ALAP
     # mobility + earliest-slot SEND reservation + rematerialization)
-    pg = sim.compile(b, HW_PAPER, sched_strategy="greedy").program
+    pg = sim.compile(b, HW_PAPER, sched_strategy="greedy",
+                     placement="identity").program
     row["vcpl_sched_greedy"] = pg.vcpl
     row["vcpl_sched_slack"] = po.vcpl
     row["vcpl_sched_delta"] = po.vcpl - pg.vcpl
@@ -124,6 +139,18 @@ def bench_circuit(nm: str, scale: str, reps: int) -> dict:
     row["sched_prio"] = po.stats["sched_prio"]
     row["remat_sends"] = po.stats["remat_sends"]
     row["remat_instrs"] = po.stats["remat_instrs"]
+    # communication profile + placement strategy comparison (core.place):
+    # the default compile ships the better of {anneal, identity}; the
+    # identity arm is recompiled explicitly for the side-by-side
+    pp = sim.compile(b, HW_PAPER, placement="identity").program
+    row["n_sends"] = po.n_sends
+    row["total_hops"] = _program_hops(po)
+    row["total_hops_identity"] = _program_hops(pp)
+    row["mean_hops_per_send"] = row["total_hops"] / max(po.n_sends, 1)
+    row["vcpl_place_anneal"] = po.vcpl
+    row["vcpl_place_identity"] = pp.vcpl
+    row["place_pick"] = po.stats["place_pick"]
+    row["place_seconds"] = po.stats["place_seconds"]
     # per-core utilization of the shipped (slack) schedule
     for k in ("cores_used", "core_load_max", "core_load_mean",
               "nop_density_hist", "epilogue_share"):

@@ -1,51 +1,99 @@
-"""Roofline report: reads results/dryrun/*.json, emits the per-cell table
-(markdown to stdout + results/bench/roofline.json)."""
+"""Roofline: measured engine throughput vs the static-BSP machine model.
+
+A compiled Program fixes everything the machine will do: ``vcpl`` slots per
+simulated RTL cycle, one slot per core per clock. The hardware roofline for
+a circuit is therefore ``MANTICORE_CLOCK_HZ / vcpl`` simulated Vcycles/sec
+(paper Table 2 prototype clock), and the schedule's own accounting says how
+much of the machine each Vcycle actually uses (``useful_fraction`` — mean
+non-NOP slots per used core over the Vcycle) and where the ceiling comes
+from (``bottleneck``: ``epilogue`` when the SEND-drain tail dominates,
+``compute`` otherwise).
+
+Per circuit this bench compiles through the ``repro.sim`` facade (both the
+5x5 bench grid it measures on and the paper's 15x15 evaluation grid for the
+model-side numbers), measures the specialized jnp engine's Vcycles/sec, and
+reports the fraction of the respective roofline the interpreter reaches —
+the honest gap a real accelerator backend has to close (ROADMAP: "as fast
+as the hardware allows").
+
+Emits ``results/bench/roofline.json`` via the shared driver.
+
+  PYTHONPATH=src python -m benchmarks.roofline            # all nine
+  PYTHONPATH=src python -m benchmarks.roofline bc --smoke # CI smoke
+"""
 from __future__ import annotations
 
-import json
-from pathlib import Path
+import sys
 
-from .common import emit, row_csv
+import jax
 
-DRYRUN = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+from benchmarks.common import MANTICORE_CLOCK_HZ, best_time, row_csv, \
+    run_rows
+import repro.sim as sim
+from repro.circuits import CIRCUITS
+from repro.core import HardwareConfig
 
-
-def load(mesh: str = "16x16", tag: str = ""):
-    rows = []
-    for f in sorted(DRYRUN.glob(f"*__{mesh}{tag}.json")):
-        rec = json.loads(f.read_text())
-        if rec.get("status") != "ok":
-            rows.append(rec)
-            continue
-        rows.append(rec)
-    return rows
+HW_RUN = HardwareConfig(grid_width=5, grid_height=5)      # measured grid
+HW_PAPER = HardwareConfig(grid_width=15, grid_height=15)  # model grid
+REPS = 3
+EPILOGUE_BOUND = 0.25    # epilogue share above which the NoC tail dominates
 
 
-def table(rows):
-    out = ["| arch | shape | bottleneck | t_comp (s) | t_mem (s) | "
-           "t_coll (s) | useful/HLO | roofline frac |",
-           "|---|---|---|---|---|---|---|---|"]
-    for r in rows:
-        if r.get("status") != "ok":
-            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | |")
-            continue
-        rf = r["roofline"]
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {rf['bottleneck']} | "
-            f"{rf['t_compute']:.2e} | {rf['t_memory']:.2e} | "
-            f"{rf['t_collective']:.2e} | {rf['useful_fraction']:.2f} | "
-            f"{rf['roofline_fraction']:.2f} |")
-    return "\n".join(out)
+def _model(prog) -> dict:
+    """Machine-model terms for one compiled Program."""
+    st = prog.stats
+    vcpl = max(prog.vcpl, 1)
+    return {
+        "vcpl": int(prog.vcpl),
+        "t_compute": int(prog.t_compute),
+        "model_vcycles_per_s": MANTICORE_CLOCK_HZ / vcpl,
+        "useful_fraction": float(st["core_load_mean"]) / vcpl,
+        "epilogue_share": float(st["epilogue_share"]),
+        "bottleneck": ("epilogue"
+                       if st["epilogue_share"] > EPILOGUE_BOUND
+                       else "compute"),
+    }
 
 
-def run():
-    rows = load("16x16")
-    print(table(rows))
-    ok = [r for r in rows if r.get("status") == "ok"]
-    if ok:
-        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
-        row_csv("roofline/cells", float(len(ok)),
-                f"worst={worst['arch']}/{worst['shape']}"
-                f"@{worst['roofline']['roofline_fraction']:.2f}")
-    emit("roofline", rows)
-    return rows
+def bench_circuit(nm: str, scale: str, reps: int) -> dict:
+    s_run = sim.compile(nm, HW_RUN, scale=scale)
+    s_model = sim.compile(nm, HW_PAPER, scale=scale)
+    row = {"circuit": nm, "scale": scale,
+           "grid_run": [HW_RUN.grid_width, HW_RUN.grid_height],
+           "grid_model": [HW_PAPER.grid_width, HW_PAPER.grid_height],
+           "run": _model(s_run.program),
+           "model": _model(s_model.program)}
+    n = min(max(8, (s_run.n_cycles or 16) - 2), 128)
+    eng = s_run.engine("jnp")
+    m = eng.m
+
+    def once():
+        jax.block_until_ready(m.run(m.init_state(), n).regs)
+    rate = n / best_time(once, reps)
+    row["vcycles"] = n
+    row["jnp_vcycles_per_s"] = rate
+    row["roofline_fraction"] = rate / row["run"]["model_vcycles_per_s"]
+    row_csv(f"roofline/{nm}", 1e6 / rate,
+            f"{row['model']['bottleneck']} "
+            f"useful {row['model']['useful_fraction']:.2f} "
+            f"frac {row['roofline_fraction']:.4f}")
+    return row
+
+
+def run(names=None, smoke: bool = False):
+    scale = "small" if smoke else "full"
+    reps = 1 if smoke else REPS
+    run_rows([nm for nm in sorted(CIRCUITS) if not names or nm in names],
+             lambda nm: bench_circuit(nm, scale, reps),
+             "roofline", smoke,
+             lambda rows: "interpreter reaches %.4f of the hw roofline at "
+             "best; %d/%d circuits epilogue-bound on the paper grid" % (
+                 max((r["roofline_fraction"] for r in rows), default=0.0),
+                 sum(r["model"]["bottleneck"] == "epilogue" for r in rows),
+                 len(rows)))
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    run([a for a in argv if not a.startswith("-")] or None,
+        smoke="--smoke" in argv)

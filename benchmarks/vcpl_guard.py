@@ -7,12 +7,17 @@ is compiled with the default ``sched_strategy="slack"`` (schedule validator
 on) and its VCPL compared against the committed expectations in
 ``results/expectations/vcpl.json``.
 
-Two failure modes trip it:
+Three failure modes trip it:
 
   * a circuit's slack VCPL exceeds its committed value by more than
-    ``TOLERANCE`` slots — a scheduler / rematerialization regression;
+    ``TOLERANCE`` slots — a scheduler / rematerialization / placement
+    regression;
   * slack VCPL exceeds the *greedy* VCPL recorded alongside it — the new
-    strategy must never lose to the baseline it replaced.
+    strategy must never lose to the baseline it replaced;
+  * the default ``placement="anneal"`` loses to ``placement="identity"``
+    on any circuit — the annealer ships the better of the two scheduled
+    geometries (``core.place``), so losing means the best-of-two pick
+    broke.
 
 Improvements do not fail the guard; they print a hint to refresh the
 expectations. Regenerate deliberately with:
@@ -44,13 +49,22 @@ def measure(names) -> dict:
     out = {}
     for nm in names:
         c = build(nm, "full").circuit
-        ps = compile_circuit(c, HW, sched_strategy="slack", check=True)
-        pg = compile_circuit(c, HW, sched_strategy="greedy", check=True)
+        # vcpl_slack is the shipping default: slack scheduler + annealed
+        # placement (best-of-two vs identity inside compile_circuit)
+        ps = compile_circuit(c, HW, sched_strategy="slack",
+                             placement="anneal", check=True)
+        pi = compile_circuit(c, HW, sched_strategy="slack",
+                             placement="identity", check=True)
+        pg = compile_circuit(c, HW, sched_strategy="greedy",
+                             placement="identity", check=True)
         out[nm] = {
             "vcpl_slack": int(ps.vcpl),
+            "vcpl_identity": int(pi.vcpl),
             "vcpl_greedy": int(pg.vcpl),
             "crit_path_lb": int(ps.stats["crit_path_lb"]),
             "remat_sends": int(ps.stats["remat_sends"]),
+            "total_hops": int(ps.stats["total_hops"]),
+            "place_pick": str(ps.stats["place_pick"]),
         }
     return out
 
@@ -76,6 +90,10 @@ def run(update: bool = False, smoke: bool = False) -> None:
             errors.append(
                 f"{nm}: slack vcpl {g['vcpl_slack']} worse than greedy "
                 f"{g['vcpl_greedy']}")
+        if g["vcpl_slack"] > g["vcpl_identity"]:
+            errors.append(
+                f"{nm}: anneal placement vcpl {g['vcpl_slack']} worse than "
+                f"identity {g['vcpl_identity']} — best-of-two pick broke")
         if g["vcpl_slack"] < w["vcpl_slack"]:
             better.append(f"{nm} {w['vcpl_slack']}->{g['vcpl_slack']}")
     if errors:
@@ -85,8 +103,11 @@ def run(update: bool = False, smoke: bool = False) -> None:
               ") — refresh with --update to lock it in")
     wins = sum(got[nm]["vcpl_slack"] < got[nm]["vcpl_greedy"]
                for nm in names)
+    pwins = sum(got[nm]["vcpl_slack"] < got[nm]["vcpl_identity"]
+                for nm in names)
     print(f"# vcpl_guard OK: {len(names)} circuits, slack beats greedy on "
-          f"{wins}, regressions 0")
+          f"{wins}, anneal placement beats identity on {pwins}, "
+          f"regressions 0")
 
 
 if __name__ == "__main__":

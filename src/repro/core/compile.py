@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import numpy as np
 
@@ -23,6 +23,7 @@ from .lutsynth import synthesize
 from .opt import optimize_lowered
 from .netlist import Circuit
 from .partition import Partition, SendEdge, partition
+from .place import PLACEMENTS, hop_cost, place
 from .regalloc import CoreAlloc, allocate
 from .remat import rematerialize
 from .schedule import ScheduleResult, schedule, validate_schedule
@@ -272,44 +273,36 @@ def _reachable(adj: Dict[int, List[int]], start: int) -> Set[int]:
     return out
 
 
-def compile_circuit(circuit: Circuit,
-                    hw: Optional[HardwareConfig] = None,
-                    strategy: str = "balanced",
-                    use_luts: bool = True,
-                    optimize: bool = True,
-                    sched_strategy: str = "slack",
-                    check: bool = False,
-                    timings: Optional[Dict[str, float]] = None) -> Program:
-    """Compile ``circuit`` into an executable :class:`Program`.
+@dataclass
+class _Arm:
+    """One scheduled compile arm: a candidate placement taken through
+    remat + lutsynth + SEND insertion + commit planning + scheduling."""
+    name: str
+    core_of_proc: List[int]
+    part: Partition
+    proc_instrs: List[List[Instr]]
+    proc_tables: List[List[Tuple[int, ...]]]
+    send_dst_core: Dict[int, int]
+    send_meta: List[Tuple[SendEdge, Instr]]
+    war_edges: List[List[Tuple[int, int]]]
+    order_edges: List[List[Tuple[int, int]]]
+    share: List[Dict[int, int]]
+    commit_movs: int
+    shared_commits: int
+    remat_stats: Dict[str, int]
+    sched: ScheduleResult
 
-    ``strategy`` picks the partition merge heuristic (``"balanced"`` /
-    ``"lpt"``), ``sched_strategy`` the scheduler (``"slack"`` — the
-    slack-driven default with rematerialization — or ``"greedy"``, the
-    original scheduler kept frozen for differential testing; see
-    ``core.schedule``). ``check=True`` re-validates the schedule against
-    the machine model (``core.schedule.validate_schedule``) before
-    emitting the binary."""
-    hw = hw or HardwareConfig()
-    tm: Dict[str, float] = {} if timings is None else timings
 
-    t0 = time.perf_counter()
-    low = lower(circuit)
-    tm["lower"] = time.perf_counter() - t0
-
-    # ---- optimizing middle-end (PR 3; optimize=False is the bit-identical
-    # legacy path: the pass pipeline is skipped entirely) ------------------
-    instrs_lowered = len(low.instrs)
-    opt_records: List[Dict] = []
-    if optimize:
-        t0 = time.perf_counter()
-        low, opt_records = optimize_lowered(low)
-        tm["opt"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    part = partition(low, hw.num_cores, strategy)
-    tm["partition"] = time.perf_counter() - t0
+def _compile_arm(name: str, core_of_proc: List[int], low: Lowered,
+                 part: Partition, hw: HardwareConfig, use_luts: bool,
+                 sched_strategy: str, check: bool,
+                 tm: Dict[str, float]) -> _Arm:
+    """Take one candidate placement through the placement-dependent
+    backend: rematerialization (route costs), LUT synthesis, SEND
+    insertion (destination cores), commit planning, and scheduling (NoC
+    link/arrival reservation). ``part`` is mutated — pass a clone when
+    scheduling more than one arm."""
     nproc = part.num_procs
-    assert nproc <= hw.num_cores, (nproc, hw.num_cores)
 
     # ---- partition-aware rematerialization (slack strategy only: the
     # greedy path stays bit-identical to the frozen differential baseline)
@@ -318,8 +311,8 @@ def compile_circuit(circuit: Circuit,
     if sched_strategy == "slack":
         t0 = time.perf_counter()
         remat_stats = rematerialize(low, part, hw,
-                                    core_of_proc=list(range(nproc)))
-        tm["remat"] = time.perf_counter() - t0
+                                    core_of_proc=core_of_proc)
+        tm["remat"] = tm.get("remat", 0.0) + time.perf_counter() - t0
 
     # protected vregs: values with consumers outside the instruction lists
     # (the same liveness roots the opt passes preserve)
@@ -339,10 +332,7 @@ def compile_circuit(circuit: Circuit,
             tables = []
         proc_instrs.append(instrs)
         proc_tables.append(tables)
-    tm["lutsynth"] = time.perf_counter() - t0
-
-    # ---- placement: privileged process on core 0, rest in order ---------
-    core_of_proc = list(range(nproc))
+    tm["lutsynth"] = tm.get("lutsynth", 0.0) + time.perf_counter() - t0
 
     # ---- SEND insertion + commit planning --------------------------------
     send_dst_core: Dict[int, int] = {}
@@ -413,10 +403,111 @@ def compile_circuit(circuit: Circuit,
     t0 = time.perf_counter()
     sched = schedule(proc_instrs, core_of_proc, hw, send_dst_core,
                      war_edges, order_edges, strategy=sched_strategy)
-    tm["schedule"] = time.perf_counter() - t0
+    tm["schedule"] = tm.get("schedule", 0.0) + time.perf_counter() - t0
     if check:
         validate_schedule(sched, proc_instrs, core_of_proc, hw,
                           send_dst_core, war_edges, order_edges)
+
+    return _Arm(name, core_of_proc, part, proc_instrs, proc_tables,
+                send_dst_core, send_meta, war_edges, order_edges, share,
+                commit_movs, shared_commits, remat_stats, sched)
+
+
+def compile_circuit(circuit: Circuit,
+                    hw: Optional[HardwareConfig] = None,
+                    strategy: str = "balanced",
+                    use_luts: bool = True,
+                    optimize: bool = True,
+                    sched_strategy: str = "slack",
+                    placement: Union[str, Sequence[int]] = "anneal",
+                    check: bool = False,
+                    timings: Optional[Dict[str, float]] = None) -> Program:
+    """Compile ``circuit`` into an executable :class:`Program`.
+
+    ``strategy`` picks the partition merge heuristic (``"balanced"`` /
+    ``"lpt"``), ``sched_strategy`` the scheduler (``"slack"`` — the
+    slack-driven default with rematerialization — or ``"greedy"``, the
+    original scheduler kept frozen for differential testing; see
+    ``core.schedule``). ``placement`` picks the process-to-core mapping
+    (``core.place``): ``"anneal"`` (default) optimizes slack-weighted hop
+    count and ships whichever of {annealed, identity} geometry schedules
+    the lower VCPL; ``"identity"`` is the frozen process-p-on-core-p
+    mapping; an explicit core list (one core id per process, all distinct)
+    is a testing hook. ``check=True`` re-validates the schedule against
+    the machine model (``core.schedule.validate_schedule``) before
+    emitting the binary."""
+    hw = hw or HardwareConfig()
+    tm: Dict[str, float] = {} if timings is None else timings
+
+    t0 = time.perf_counter()
+    low = lower(circuit)
+    tm["lower"] = time.perf_counter() - t0
+
+    # ---- optimizing middle-end (PR 3; optimize=False is the bit-identical
+    # legacy path: the pass pipeline is skipped entirely) ------------------
+    instrs_lowered = len(low.instrs)
+    opt_records: List[Dict] = []
+    if optimize:
+        t0 = time.perf_counter()
+        low, opt_records = optimize_lowered(low)
+        tm["opt"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    part0 = partition(low, hw.num_cores, strategy)
+    tm["partition"] = time.perf_counter() - t0
+    nproc = part0.num_procs
+    assert nproc <= hw.num_cores, (nproc, hw.num_cores)
+
+    # ---- placement (core.place): candidate process-to-core mappings ------
+    t0 = time.perf_counter()
+    place_stats: Dict[str, float] = {}
+    if isinstance(placement, str):
+        placement_name = placement
+        pl = place(low, part0, hw, strategy=placement)
+        place_stats = dict(pl.stats)
+        ident = list(range(nproc))
+        if pl.core_of_proc != ident:
+            # schedule both geometries, ship the lower VCPL: the weighted
+            # hop objective is a proxy — the scheduler is the arbiter
+            candidates = [("anneal", pl.core_of_proc), ("identity", ident)]
+        else:
+            candidates = [(placement, ident)]
+    else:
+        placement_name = "explicit"
+        cop = [int(c) for c in placement]
+        if (len(cop) != nproc or len(set(cop)) != nproc
+                or any(c < 0 or c >= hw.num_cores for c in cop)):
+            raise ValueError(
+                f"explicit placement must be {nproc} distinct core ids "
+                f"< {hw.num_cores}, got {cop}")
+        place_stats = {"total_hops": float(hop_cost(cop, part0.sends, hw)),
+                       "weighted_hops": 0.0, "place_moves": 0.0}
+        candidates = [("explicit", cop)]
+    tm["place"] = time.perf_counter() - t0
+
+    best: Optional[_Arm] = None
+    for arm_name, core_of_proc in candidates:
+        arm_part = part0.clone() if len(candidates) > 1 else part0
+        arm = _compile_arm(arm_name, core_of_proc, low, arm_part, hw,
+                           use_luts, sched_strategy, check, tm)
+        # <= so identity (scheduled second) wins ties: same VCPL at a more
+        # compact core numbering
+        if best is None or arm.sched.vcpl <= best.sched.vcpl:
+            best = arm
+    assert best is not None
+    if best.name == "identity" and len(candidates) > 1:
+        # the annealed geometry lost at the scheduler: report identity hops
+        place_stats["total_hops"] = place_stats.get(
+            "identity_hops", place_stats.get("total_hops", 0.0))
+        place_stats["weighted_hops"] = place_stats.get(
+            "identity_weighted_hops", place_stats.get("weighted_hops", 0.0))
+    part, core_of_proc, sched = best.part, best.core_of_proc, best.sched
+    proc_instrs, proc_tables = best.proc_instrs, best.proc_tables
+    send_meta, send_dst_core = best.send_meta, best.send_dst_core
+    share = best.share
+    commit_movs, shared_commits = best.commit_movs, best.shared_commits
+    remat_stats = best.remat_stats
+    used = max(core_of_proc) + 1 if core_of_proc else 1
 
     # ---- memory placement (resolve relocations) --------------------------
     spad_base: Dict[str, int] = {}
@@ -551,8 +642,8 @@ def compile_circuit(circuit: Circuit,
 
     # partial-evaluation metadata: per-slot opcode usage + histogram (the
     # engines specialize on this; see core.bsp / kernels.vcycle)
-    op_masks = slot_op_masks(code, nproc)
-    opcodes, op_counts = np.unique(code[:nproc, :, 0], return_counts=True)
+    op_masks = slot_op_masks(code, used)
+    opcodes, op_counts = np.unique(code[:used, :, 0], return_counts=True)
     op_histogram = {Op(int(o)).name: int(n)
                     for o, n in zip(opcodes, op_counts) if o}
 
@@ -580,9 +671,13 @@ def compile_circuit(circuit: Circuit,
         "lut_tables": sum(len(t) for t in proc_tables),
         "lut_instrs": int((code[..., 0] == int(Op.LUT)).sum()),
         "op_histogram": op_histogram,
-        "used_cores": nproc,
+        "used_cores": used,
         "spad_words_max": max(core_spad_used),
         "compile_times": dict(tm),
+        "placement": placement_name,
+        "place_pick": best.name,
+        "place_seconds": round(tm.get("place", 0.0), 6),
+        **{k: v for k, v in place_stats.items() if k != "place_seconds"},
     })
 
     return Program(
@@ -592,6 +687,6 @@ def compile_circuit(circuit: Circuit,
         xchg_src_slot=np.array(xs_slot, dtype=np.int32),
         xchg_dst_core=np.array(xd_core, dtype=np.int32),
         xchg_dst_reg=np.array(xd_reg, dtype=np.int32),
-        t_compute=sched.t_compute, vcpl=sched.vcpl, used_cores=nproc,
+        t_compute=sched.t_compute, vcpl=sched.vcpl, used_cores=used,
         outputs=outputs, state_regs=state_regs, stats=stats,
         slot_op_mask=op_masks)

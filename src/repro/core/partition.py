@@ -75,6 +75,22 @@ class Partition:
     def num_procs(self) -> int:
         return len(self.procs)
 
+    def clone(self) -> "Partition":
+        """Independent copy for a compile arm: ``core.remat`` mutates
+        ``procs``/``sends``/commit sets in place, and ``compile_circuit``
+        schedules one arm per candidate placement. ``lowered`` is shared
+        (read-only past partitioning); ``SendEdge``s are fresh objects
+        because remat keys deletions by identity."""
+        return Partition(
+            self.lowered, [list(p) for p in self.procs], self.priv_proc,
+            [list(m) for m in self.proc_mems],
+            [SendEdge(e.src_proc, e.nxt_vreg, e.dst_proc, e.cur_vreg)
+             for e in self.sends],
+            list(self.local_commits),
+            remat_commits=set(self.remat_commits),
+            remat_reads=set(self.remat_reads),
+            split_count=self.split_count, merge_steps=self.merge_steps)
+
     def stats(self) -> Dict[str, int]:
         sizes = [len(p) for p in self.procs]
         return {

@@ -14,7 +14,7 @@ The cache key is a SHA-256 over:
   semantic difference does not),
 * every :class:`~repro.core.isa.HardwareConfig` field,
 * the compiler options (``strategy``, ``use_luts``, ``optimize``,
-  ``sched_strategy``),
+  ``sched_strategy``, ``placement``),
 * the artifact :data:`~repro.sim.artifact.FORMAT_VERSION` (a schema bump
   silently invalidates old entries — they just miss).
 
@@ -48,7 +48,8 @@ def default_cache_dir() -> Path:
 
 def cache_key(circuit: Circuit, hw: HardwareConfig, *,
               strategy: str = "balanced", use_luts: bool = True,
-              optimize: bool = True, sched_strategy: str = "slack") -> str:
+              optimize: bool = True, sched_strategy: str = "slack",
+              placement: str = "anneal") -> str:
     """Deterministic key for one (circuit, hardware, options) request."""
     payload = json.dumps({
         "format_version": FORMAT_VERSION,
@@ -58,6 +59,7 @@ def cache_key(circuit: Circuit, hw: HardwareConfig, *,
         "use_luts": bool(use_luts),
         "optimize": bool(optimize),
         "sched_strategy": sched_strategy,
+        "placement": placement,
     }, sort_keys=True)
     return hashlib.sha256(payload.encode("utf-8")).hexdigest()
 

@@ -251,6 +251,7 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
             scale: str = "full", seeds: Optional[Sequence[int]] = None,
             optimize: bool = True, use_luts: bool = True,
             strategy: str = "balanced", sched_strategy: str = "slack",
+            placement: str = "anneal",
             cache: Union[bool, str, Path, CompileCache, None] = None,
             shard_batch: Optional[bool] = None,
             **overrides) -> Simulation:
@@ -272,6 +273,10 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     ``sched_strategy`` selects the scheduler: ``"slack"`` (default, the
     slack-driven list scheduler with rematerialization) or ``"greedy"``
     (the frozen differential baseline); see ``core.schedule``.
+    ``placement`` selects the process-to-core mapping: ``"anneal"``
+    (default, the communication-aware annealer — ships the better of the
+    annealed and identity geometries) or ``"identity"`` (the frozen
+    process-p-on-core-p order); see ``core.place``.
     """
     bench, circuit = _resolve_source(source, scale, seeds, overrides)
     if bench is not None:
@@ -283,12 +288,14 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     key = None
     if cc is not None:
         key = cache_key(circuit, hw, strategy=strategy, use_luts=use_luts,
-                        optimize=optimize, sched_strategy=sched_strategy)
+                        optimize=optimize, sched_strategy=sched_strategy,
+                        placement=placement)
         prog = cc.load(key)
     if prog is None:
         prog = compile_circuit(circuit, hw, strategy=strategy,
                                use_luts=use_luts, optimize=optimize,
-                               sched_strategy=sched_strategy)
+                               sched_strategy=sched_strategy,
+                               placement=placement)
         prog.stats["cache_hit"] = False
         if cc is not None:
             cc.store(key, prog)

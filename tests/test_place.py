@@ -1,0 +1,207 @@
+"""Placement tests: traffic graph, annealer determinism, route rewrite,
+and the core invariant — placement can only change *performance*, never
+*results*: any valid core permutation keeps every circuit bit-exact
+against the netlist oracle."""
+import random
+
+import pytest
+
+from repro.circuits import CIRCUITS, FINISH, build
+from repro.core.compile import compile_circuit
+from repro.core.interpreter import NetlistSim
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+from repro.core.lower import lower
+from repro.core.opt import optimize_lowered
+from repro.core.partition import partition
+from repro.core.place import (hop_cost, place, traffic_graph,
+                              weighted_cost)
+
+NAMES = sorted(CIRCUITS)
+HW = HardwareConfig(grid_width=5, grid_height=5)
+
+
+def _middle_end(name: str, scale: str = "small"):
+    b = build(name, scale)
+    low = lower(b.circuit)
+    low, _ = optimize_lowered(low)
+    part = partition(low, HW.num_cores, "balanced")
+    return b, low, part
+
+
+# ---------------------------------------------------------------------
+# traffic graph
+# ---------------------------------------------------------------------
+
+def test_traffic_graph_edges_and_weights():
+    _, low, part = _middle_end("noc")
+    g = traffic_graph(low, part, HW)
+    pairs = {(e.src_proc, e.dst_proc) for e in part.sends}
+    assert set(g) == pairs
+    # each SendEdge contributes 1 + crit with crit in [0, 1]
+    n_sends = len(part.sends)
+    assert n_sends <= sum(g.values()) <= 2 * n_sends
+    counts = {}
+    for e in part.sends:
+        k = (e.src_proc, e.dst_proc)
+        counts[k] = counts.get(k, 0) + 1
+    for k, w in g.items():
+        assert counts[k] <= w <= 2 * counts[k], (k, w, counts[k])
+
+
+def test_cost_helpers_identity_vs_shuffle():
+    _, low, part = _middle_end("noc")
+    g = traffic_graph(low, part, HW)
+    n = part.num_procs
+    ident = list(range(n))
+    assert weighted_cost(ident, g, HW) >= hop_cost(ident, part.sends, HW)
+    # hop_cost is a sum of nonneg torus distances, zero only with no sends
+    assert hop_cost(ident, part.sends, HW) > 0
+
+
+# ---------------------------------------------------------------------
+# annealer
+# ---------------------------------------------------------------------
+
+def test_place_deterministic_under_fixed_seed():
+    _, low, part = _middle_end("noc")
+    a = place(low, part, HW, strategy="anneal", seed=0)
+    b = place(low, part, HW, strategy="anneal", seed=0)
+    assert a.core_of_proc == b.core_of_proc
+    assert a.stats["total_hops"] == b.stats["total_hops"]
+    assert a.stats["weighted_hops"] == b.stats["weighted_hops"]
+
+
+def test_place_never_worse_than_identity_in_objective():
+    for nm in ("noc", "mc", "bc"):
+        _, low, part = _middle_end(nm)
+        g = traffic_graph(low, part, HW)
+        pl = place(low, part, HW, strategy="anneal")
+        n = part.num_procs
+        assert sorted(pl.core_of_proc) == sorted(set(pl.core_of_proc))
+        assert len(pl.core_of_proc) == n
+        w_pl = weighted_cost(pl.core_of_proc, g, HW)
+        w_id = weighted_cost(list(range(n)), g, HW)
+        assert w_pl <= w_id
+
+
+def test_place_identity_strategy_is_identity():
+    _, low, part = _middle_end("mc")
+    pl = place(low, part, HW, strategy="identity")
+    assert pl.core_of_proc == list(range(part.num_procs))
+
+
+def test_place_rejects_unknown_strategy():
+    _, low, part = _middle_end("blur")
+    with pytest.raises(ValueError):
+        place(low, part, HW, strategy="magic")
+
+
+# ---------------------------------------------------------------------
+# route rewrite through compile_circuit
+# ---------------------------------------------------------------------
+
+def test_explicit_placement_rewrites_routes():
+    b = build("noc", "small")
+    p0 = compile_circuit(b.circuit, HW, placement="identity")
+    n = p0.stats["procs"]
+    rnd = random.Random(7)
+    cop = rnd.sample(range(HW.num_cores), n)
+    p1 = compile_circuit(b.circuit, HW, placement=cop)
+    assert p1.stats["placement"] == "explicit"
+    assert p1.used_cores == max(cop) + 1
+    # every exchange entry routes between *placed* cores
+    placed = set(cop)
+    for s, d in zip(p1.xchg_src_core, p1.xchg_dst_core):
+        assert int(s) in placed and int(d) in placed
+
+
+def test_explicit_placement_validation():
+    b = build("blur", "small")
+    p0 = compile_circuit(b.circuit, HW, placement="identity")
+    n = p0.stats["procs"]
+    with pytest.raises(ValueError):
+        compile_circuit(b.circuit, HW, placement=[0] * n)   # not distinct
+    with pytest.raises(ValueError):
+        compile_circuit(b.circuit, HW,
+                        placement=list(range(1, n + 1)) + [0])  # wrong len
+
+
+def test_compile_rejects_unknown_placement():
+    b = build("blur", "small")
+    with pytest.raises(ValueError):
+        compile_circuit(b.circuit, HW, placement="magic")
+
+
+def test_anneal_never_loses_to_identity():
+    """The scheduler-level best-of-two: anneal ships identity's schedule
+    whenever the annealed geometry doesn't beat it."""
+    for nm in NAMES:
+        b = build(nm, "small")
+        pa = compile_circuit(b.circuit, HW, placement="anneal")
+        pi = compile_circuit(b.circuit, HW, placement="identity")
+        assert pa.vcpl <= pi.vcpl, nm
+        assert pa.stats["place_pick"] in ("anneal", "identity")
+        for k in ("total_hops", "weighted_hops", "place_seconds",
+                  "place_moves"):
+            assert k in pa.stats, k
+
+
+# ---------------------------------------------------------------------
+# the invariant: placement never changes results
+# ---------------------------------------------------------------------
+
+def _assert_bit_exact(b, prog):
+    oracle = NetlistSim(b.circuit)
+    oracle.run(b.n_cycles + 10)
+    sim = IsaSim(prog)
+    assert sim.run(b.n_cycles + 10) == b.n_cycles
+    assert set(sim.exceptions().values()) == {FINISH}
+    for name in prog.state_regs:
+        assert sim.read_reg(name) == oracle.reg_value(name), name
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_random_permutation_bit_exact(name):
+    """A seeded random core permutation keeps each of the nine circuits
+    bit-exact against the netlist oracle."""
+    b = build(name, "small")
+    p0 = compile_circuit(b.circuit, HW, placement="identity")
+    n = p0.stats["procs"]
+    rnd = random.Random(hash(name) & 0xffff)
+    cop = rnd.sample(range(HW.num_cores), n)
+    prog = compile_circuit(b.circuit, HW, placement=cop)
+    _assert_bit_exact(b, prog)
+
+
+@pytest.mark.parametrize("strategy", ["anneal", "identity"])
+@pytest.mark.parametrize("name", NAMES)
+def test_placement_strategies_bit_exact(name, strategy):
+    b = build(name, "small")
+    prog = compile_circuit(b.circuit, HW, placement=strategy, check=True)
+    _assert_bit_exact(b, prog)
+
+
+# ---------------------------------------------------------------------
+# hypothesis: arbitrary valid permutations (skipped where unavailable)
+# ---------------------------------------------------------------------
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import HealthCheck, given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data(), name=st.sampled_from(["noc", "bc", "vta"]))
+    def test_any_permutation_bit_exact(data, name):
+        b = build(name, "small")
+        p0 = compile_circuit(b.circuit, HW, placement="identity")
+        n = p0.stats["procs"]
+        cop = data.draw(st.permutations(range(HW.num_cores)))[:n]
+        prog = compile_circuit(b.circuit, HW, placement=list(cop))
+        _assert_bit_exact(b, prog)
