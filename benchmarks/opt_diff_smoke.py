@@ -57,11 +57,13 @@ def _digest(prog, sim: IsaSim, n_cycles: int) -> dict:
 
 def run(update: bool = False) -> None:
     b = build(CIRCUIT, "full")
-    # both compiles pin the frozen greedy scheduler and identity placement:
-    # this smoke guards the legacy pre-middle-end path, not the slack
-    # scheduler or the placement annealer (vcpl_guard does)
+    # both compiles pin the frozen greedy scheduler, identity placement
+    # and pipeline="off": this smoke guards the legacy pre-middle-end
+    # path, not the slack scheduler, the placement annealer or the
+    # cross-Vcycle pipeliner (vcpl_guard does)
     p_off = compile_circuit(b.circuit, HW, optimize=False,
-                            sched_strategy="greedy", placement="identity")
+                            sched_strategy="greedy", placement="identity",
+                            pipeline="off")
     got = _digest(p_off, IsaSim(p_off), b.n_cycles)
     if update:
         EXPECT.parent.mkdir(parents=True, exist_ok=True)
@@ -77,7 +79,8 @@ def run(update: bool = False) -> None:
                 f"({EXPECT.name}): {diff}")
     # differential: the optimized program reaches the same end state
     p_opt = compile_circuit(b.circuit, HW, optimize=True,
-                            sched_strategy="greedy", placement="identity")
+                            sched_strategy="greedy", placement="identity",
+                            pipeline="off")
     sim = IsaSim(p_opt)
     assert sim.run(b.n_cycles + 10) == got["cycles"], "finish cycle differs"
     assert {str(c): int(e) for c, e in sim.exceptions().items()} \

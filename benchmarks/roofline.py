@@ -1,9 +1,11 @@
 """Roofline: measured engine throughput vs the static-BSP machine model.
 
-A compiled Program fixes everything the machine will do: ``vcpl`` slots per
-simulated RTL cycle, one slot per core per clock. The hardware roofline for
-a circuit is therefore ``MANTICORE_CLOCK_HZ / vcpl`` simulated Vcycles/sec
-(paper Table 2 prototype clock), and the schedule's own accounting says how
+A compiled Program fixes everything the machine will do: ``vcpl`` machine
+cycles per simulated RTL cycle — the steady-state initiation interval when
+cross-Vcycle modulo pipelining shipped, the barrier VCPL otherwise. The
+hardware roofline for a circuit is ``MANTICORE_CLOCK_HZ / vcpl`` simulated
+Vcycles/sec (paper Table 2 prototype clock; pipelining raises the ceiling
+exactly where the II beat the VCPL), and the schedule's accounting says how
 much of the machine each Vcycle actually uses (``useful_fraction`` — mean
 non-NOP slots per used core over the Vcycle) and where the ceiling comes
 from (``bottleneck``: ``epilogue`` when the SEND-drain tail dominates,
@@ -40,11 +42,19 @@ EPILOGUE_BOUND = 0.25    # epilogue share above which the NoC tail dominates
 
 
 def _model(prog) -> dict:
-    """Machine-model terms for one compiled Program."""
+    """Machine-model terms for one compiled Program.
+
+    ``prog.vcpl`` is the *shipped* machine-cycles-per-Vcycle: the
+    steady-state initiation interval when cross-Vcycle pipelining won the
+    best-of-two, the barrier VCPL otherwise — so the roofline is the
+    pipelined machine's bound whenever pipelining is on. The unpipelined
+    span is reported alongside for the delta."""
     st = prog.stats
     vcpl = max(prog.vcpl, 1)
     return {
         "vcpl": int(prog.vcpl),
+        "vcpl_unpipelined": int(st.get("vcpl_unpipelined", prog.vcpl)),
+        "pipeline_pick": str(st.get("pipeline_pick", "off")),
         "t_compute": int(prog.t_compute),
         "model_vcycles_per_s": MANTICORE_CLOCK_HZ / vcpl,
         "useful_fraction": float(st["core_load_mean"]) / vcpl,

@@ -7,7 +7,7 @@ is compiled with the default ``sched_strategy="slack"`` (schedule validator
 on) and its VCPL compared against the committed expectations in
 ``results/expectations/vcpl.json``.
 
-Three failure modes trip it:
+Five failure modes trip it:
 
   * a circuit's slack VCPL exceeds its committed value by more than
     ``TOLERANCE`` slots — a scheduler / rematerialization / placement
@@ -17,7 +17,13 @@ Three failure modes trip it:
   * the default ``placement="anneal"`` loses to ``placement="identity"``
     on any circuit — the annealer ships the better of the two scheduled
     geometries (``core.place``), so losing means the best-of-two pick
-    broke.
+    broke;
+  * the shipped steady-state initiation interval (``vcpl_ii``, from the
+    default ``pipeline="modulo"`` arm) exceeds its committed value — a
+    cross-Vcycle pipeliner regression;
+  * the shipped II exceeds the unpipelined VCPL on any circuit — the
+    pipeline best-of-two ship rule broke (II may never be worse than the
+    barrier machine it replaces).
 
 Improvements do not fail the guard; they print a hint to refresh the
 expectations. Regenerate deliberately with:
@@ -54,13 +60,21 @@ def measure(names) -> dict:
         ps = compile_circuit(c, HW, sched_strategy="slack",
                              placement="anneal", check=True)
         pi = compile_circuit(c, HW, sched_strategy="slack",
-                             placement="identity", check=True)
+                             placement="identity", pipeline="off",
+                             check=True)
         pg = compile_circuit(c, HW, sched_strategy="greedy",
-                             placement="identity", check=True)
+                             placement="identity", pipeline="off",
+                             check=True)
         out[nm] = {
-            "vcpl_slack": int(ps.vcpl),
+            "vcpl_slack": int(ps.stats["vcpl_unpipelined"]),
             "vcpl_identity": int(pi.vcpl),
             "vcpl_greedy": int(pg.vcpl),
+            # steady-state initiation interval of the shipped (default,
+            # pipeline="modulo") program: equals vcpl_slack whenever the
+            # best-of-two pick ships the unpipelined baseline
+            "vcpl_ii": int(ps.vcpl),
+            "pipeline_pick": str(ps.stats["pipeline_pick"]),
+            "pipe_prologue": int(ps.stats["pipe_prologue_len"]),
             "crit_path_lb": int(ps.stats["crit_path_lb"]),
             "remat_sends": int(ps.stats["remat_sends"]),
             "total_hops": int(ps.stats["total_hops"]),
@@ -94,8 +108,19 @@ def run(update: bool = False, smoke: bool = False) -> None:
             errors.append(
                 f"{nm}: anneal placement vcpl {g['vcpl_slack']} worse than "
                 f"identity {g['vcpl_identity']} — best-of-two pick broke")
+        if g["vcpl_ii"] > w.get("vcpl_ii", w["vcpl_slack"]) + TOLERANCE:
+            errors.append(
+                f"{nm}: pipelined II {g['vcpl_ii']} > committed "
+                f"{w.get('vcpl_ii', w['vcpl_slack'])} (+{TOLERANCE} "
+                f"tolerance)")
+        if g["vcpl_ii"] > g["vcpl_slack"]:
+            errors.append(
+                f"{nm}: shipped II {g['vcpl_ii']} worse than unpipelined "
+                f"vcpl {g['vcpl_slack']} — best-of-two pipeline pick broke")
         if g["vcpl_slack"] < w["vcpl_slack"]:
             better.append(f"{nm} {w['vcpl_slack']}->{g['vcpl_slack']}")
+        elif g["vcpl_ii"] < w.get("vcpl_ii", w["vcpl_slack"]):
+            better.append(f"{nm} ii {w.get('vcpl_ii')}->{g['vcpl_ii']}")
     if errors:
         raise SystemExit("vcpl_guard FAILED:\n  " + "\n  ".join(errors))
     if better:
@@ -105,9 +130,11 @@ def run(update: bool = False, smoke: bool = False) -> None:
                for nm in names)
     pwins = sum(got[nm]["vcpl_slack"] < got[nm]["vcpl_identity"]
                 for nm in names)
+    iwins = sum(got[nm]["vcpl_ii"] < got[nm]["vcpl_slack"]
+                for nm in names)
     print(f"# vcpl_guard OK: {len(names)} circuits, slack beats greedy on "
-          f"{wins}, anneal placement beats identity on {pwins}, "
-          f"regressions 0")
+          f"{wins}, anneal placement beats identity on {pwins}, pipelined "
+          f"II below vcpl on {iwins}, regressions 0")
 
 
 if __name__ == "__main__":

@@ -362,13 +362,50 @@ class Machine:
         # raw code.
         T = self.code.shape[0]
         W = max(1, int(hw.raw_latency))
-        Tp = ((T + W - 1) // W) * W
         self.W = W
-        if specialize and backend != "pallas":
-            code_p = np.zeros((Tp, C, 7), np.int32)
-            code_p[:T] = np.asarray(self.code)
-            cap_p = np.full((Tp, C), self.n_sends, np.int32)
-            cap_p[:T] = program.send_capture(C)
+        # rotated dispatch of a modulo-pipelined program: the combined
+        # stream's first ``pipe_prologue`` slots hold the *next* Vcycle's
+        # hoisted pure ops. The specialized engines split the stream there:
+        # the body executes in the Vcycle, the prologue re-executes after
+        # the exchange gated on "no exception this cycle" (cycle k+1's
+        # in-flight prologue never commits when cycle k raises), and
+        # ``init_state`` applies iteration 0's prologue once. The seed
+        # engine keeps the full stream: executing the prologue rows at the
+        # stream head is idempotent (pure ops whose inputs are untouched
+        # since the previous epilogue recomputed them), so both dispatch
+        # forms produce bit-identical register planes.
+        self.Tpro = int(program.pipe_prologue) if specialize else 0
+        if self.Tpro:
+            head_ops = {int(o) for o in
+                        np.unique(np.asarray(self.code)[:self.Tpro, :, 0])}
+            illegal = head_ops & {int(o) for o in
+                                  (Op.ST, Op.GST, Op.EXPECT, Op.SEND,
+                                   Op.LD, Op.GLD)}
+            if illegal:
+                raise ValueError(
+                    f"pipelined prologue contains impure opcodes {illegal}")
+
+        def _pad_windows(rows_code, rows_cap):
+            t = rows_code.shape[0]
+            tp = ((t + W - 1) // W) * W
+            cp = np.zeros((tp, C, 7), np.int32)
+            cp[:t] = rows_code
+            kp = np.full((tp, C), self.n_sends, np.int32)
+            kp[:t] = rows_cap
+            return cp, kp
+
+        self._pro_windows = []
+        if specialize:
+            cap_full = program.send_capture(C)
+            code_np = np.asarray(self.code)
+            code_p, cap_p = _pad_windows(code_np[self.Tpro:],
+                                         cap_full[self.Tpro:])
+            Tp = code_p.shape[0]
+            if self.Tpro:
+                pro_p, pcap_p = _pad_windows(code_np[:self.Tpro],
+                                             cap_full[:self.Tpro])
+                self._pro_windows = self._build_windows(pro_p, pcap_p, hw)
+        T = T - self.Tpro       # body slot count drives the unroll bound
 
         # static per-window metadata for the fully-unrolled fast path:
         # (instr, ops, write/store/send/expect/global sites — all constant)
@@ -412,58 +449,8 @@ class Machine:
                 self._segments.append(
                     (step, jnp.asarray(wcode_np[idxs]),
                      jnp.asarray(wcap_np[idxs])))
-        self._windows = []
-        if self._unrolled:
-            no_write_ops = {int(o) for o in _NO_WRITE_OPS}
-            for iw in range(Tp // W):
-                instr = code_p[iw * W:(iw + 1) * W]          # [W, C, 7]
-                wcapn = cap_p[iw * W:(iw + 1) * W]           # [W, C]
-                opw = instr[..., 0]
-                if not opw.any():
-                    continue                                 # all-NOP window
-                # flat active-lane vector: the schedule's NOP lanes are
-                # known statically, so gathers/ALU run over the k non-NOP
-                # (slot, core) lanes only — a low-utilization schedule
-                # (e.g. mc at 13%) pays for the work it contains, not for
-                # the [W, C] rectangle around it
-                w_arr, c_arr = np.nonzero(opw)               # [k], w-major
-                lane = instr[w_arr, c_arr]                   # [k, 7]
-                opl = lane[:, 0]
-                wops = frozenset(Op(int(o)) for o in np.unique(opl))
-                wr_rows, st_rows, send_rows, exp_rows, glb_rows = \
-                    [], [], [], [], []
-                for w in range(W):
-                    in_w = w_arr == w
-                    wr = np.nonzero(in_w & (lane[:, 1] != 0) &
-                                    ~np.isin(opl, list(no_write_ops)))[0]
-                    if wr.size:
-                        wr_rows.append((wr, c_arr[wr], lane[wr, 1]))
-                    st = np.nonzero(in_w & (opl == int(Op.ST)))[0]
-                    if st.size:
-                        st_rows.append((st, c_arr[st]))
-                    sn = np.nonzero(in_w & (opl == int(Op.SEND)))[0]
-                    if sn.size:
-                        send_rows.append((sn, wcapn[w, c_arr[sn]]))
-                    ex = np.nonzero(in_w & (opl == int(Op.EXPECT)))[0]
-                    if ex.size:
-                        exp_rows.append((ex, c_arr[ex]))
-                    for gop, is_gst in ((Op.GLD, False), (Op.GST, True)):
-                        gl = np.nonzero(in_w & (opl == int(gop)))[0]
-                        if gl.size:
-                            glb_rows.append((gl, c_arr[gl], is_gst))
-                # merge the window's register writes into one scatter when
-                # no (core, reg) cell is written twice (WAW inside a RAW
-                # window can only come from dead writes — regalloc never
-                # emits them, but stay exact if it ever does)
-                if len(wr_rows) > 1:
-                    sss = np.concatenate([s for (s, _, _) in wr_rows])
-                    css = np.concatenate([c for (_, c, _) in wr_rows])
-                    dss = np.concatenate([d for (_, _, d) in wr_rows])
-                    cells = css.astype(np.int64) * hw.num_regs + dss
-                    if np.unique(cells).size == cells.size:
-                        wr_rows = [(sss, css, dss)]
-                self._windows.append((lane, c_arr, wops, wr_rows, st_rows,
-                                      send_rows, exp_rows, glb_rows))
+        self._windows = (self._build_windows(code_p, cap_p, hw)
+                         if self._unrolled else [])
 
         if backend == "pallas":
             from ..kernels import ops as kops
@@ -482,6 +469,64 @@ class Machine:
             self._run = jax.jit(self._run_legacy,
                                 static_argnames=("num_cycles",))
 
+    def _build_windows(self, code_p, cap_p, hw):
+        """Static per-window metadata for the fully-unrolled fast path
+        (one entry per non-NOP window; see ``_exec_windows``)."""
+        C = self.C
+        W = self.W
+        windows = []
+        no_write_ops = {int(o) for o in _NO_WRITE_OPS}
+        for iw in range(code_p.shape[0] // W):
+            instr = code_p[iw * W:(iw + 1) * W]          # [W, C, 7]
+            wcapn = cap_p[iw * W:(iw + 1) * W]           # [W, C]
+            opw = instr[..., 0]
+            if not opw.any():
+                continue                                 # all-NOP window
+            # flat active-lane vector: the schedule's NOP lanes are
+            # known statically, so gathers/ALU run over the k non-NOP
+            # (slot, core) lanes only — a low-utilization schedule
+            # (e.g. mc at 13%) pays for the work it contains, not for
+            # the [W, C] rectangle around it
+            w_arr, c_arr = np.nonzero(opw)               # [k], w-major
+            lane = instr[w_arr, c_arr]                   # [k, 7]
+            opl = lane[:, 0]
+            wops = frozenset(Op(int(o)) for o in np.unique(opl))
+            wr_rows, st_rows, send_rows, exp_rows, glb_rows = \
+                [], [], [], [], []
+            for w in range(W):
+                in_w = w_arr == w
+                wr = np.nonzero(in_w & (lane[:, 1] != 0) &
+                                ~np.isin(opl, list(no_write_ops)))[0]
+                if wr.size:
+                    wr_rows.append((wr, c_arr[wr], lane[wr, 1]))
+                st = np.nonzero(in_w & (opl == int(Op.ST)))[0]
+                if st.size:
+                    st_rows.append((st, c_arr[st]))
+                sn = np.nonzero(in_w & (opl == int(Op.SEND)))[0]
+                if sn.size:
+                    send_rows.append((sn, wcapn[w, c_arr[sn]]))
+                ex = np.nonzero(in_w & (opl == int(Op.EXPECT)))[0]
+                if ex.size:
+                    exp_rows.append((ex, c_arr[ex]))
+                for gop, is_gst in ((Op.GLD, False), (Op.GST, True)):
+                    gl = np.nonzero(in_w & (opl == int(gop)))[0]
+                    if gl.size:
+                        glb_rows.append((gl, c_arr[gl], is_gst))
+            # merge the window's register writes into one scatter when
+            # no (core, reg) cell is written twice (WAW inside a RAW
+            # window can only come from dead writes — regalloc never
+            # emits them, but stay exact if it ever does)
+            if len(wr_rows) > 1:
+                sss = np.concatenate([s for (s, _, _) in wr_rows])
+                css = np.concatenate([c for (_, c, _) in wr_rows])
+                dss = np.concatenate([d for (_, _, d) in wr_rows])
+                cells = css.astype(np.int64) * hw.num_regs + dss
+                if np.unique(cells).size == cells.size:
+                    wr_rows = [(sss, css, dss)]
+            windows.append((lane, c_arr, wops, wr_rows, st_rows,
+                            send_rows, exp_rows, glb_rows))
+        return windows
+
     # ------------------------------------------------------------------
     def init_state(self, images=None) -> MachineState:
         """Initial machine state; ``images=(reg_init, spad_init, gmem_init)``
@@ -494,6 +539,10 @@ class Machine:
             regs = jnp.asarray(np.asarray(ri)[:self.C, :self.R], U32)
             spads = jnp.asarray(np.asarray(si)[:self.C], U32)
             gmem = jnp.asarray(np.asarray(gi), U32)
+        if self.Tpro:
+            # rotated prologue dispatch: iteration 0's hoisted pure ops
+            # run once, before the first Vcycle's steady-state body
+            regs = self._apply_prologue(regs, spads, gmem)
         return MachineState(
             regs=regs,
             spads=spads,
@@ -502,6 +551,16 @@ class Machine:
             cache_tags=-jnp.ones((self.cache_lines,), jnp.int32),
             counters=jnp.zeros((4,), jnp.uint32),
         )
+
+    def _apply_prologue(self, regs, spads, gmem):
+        """Execute the prologue rows (pure ops — only ``regs`` changes) on
+        the given state; used for iteration 0 at init and for iteration
+        k+1 at the tail of every specialized Vcycle."""
+        flags = jnp.zeros((self.C,), U32)
+        tags = -jnp.ones((self.cache_lines,), jnp.int32)
+        counters = jnp.zeros((4,), jnp.uint32)
+        return self._exec_windows(self._pro_windows, regs, spads, gmem,
+                                  flags, tags, counters, None, [], [])[0]
 
     # ------------------------------------------------ specialized path ----
     def _vcycle(self, carry, active=None):
@@ -526,6 +585,13 @@ class Machine:
             _, _, d_core, d_reg = self.xchg
             nregs = nregs.at[d_core, d_reg].set(sbuf[:self.n_sends])
         ncounters = ncounters.at[0].add(jnp.uint32(1))
+        if self._pro_windows:
+            # cycle k+1's prologue issues in cycle k's idle tail; its
+            # register carries commit only when cycle k raised nothing
+            # (``active`` freezing is handled by the leaf select below)
+            nregs = self._exec_windows(
+                self._pro_windows, nregs, nspads, ngmem, nflags, ntags,
+                ncounters, jnp.all(nflags == 0), [], [])[0]
         new = (nregs, nspads, ngmem, nflags, ntags, ncounters)
         if active is None:
             return new
@@ -544,14 +610,48 @@ class Machine:
         selects touch only the written cells, so a frozen batch element
         costs nothing beyond the dead compute it discards."""
         regs, spads, gmem, flags, tags, counters = carry
+        send_idx, send_parts = [], []
+        regs, spads, gmem, flags, tags, counters = self._exec_windows(
+            self._windows, regs, spads, gmem, flags, tags, counters,
+            active, send_idx, send_parts)
+
+        # ---- BSP exchange: one scatter from the captured SEND values ----
+        if self.n_sends:
+            sid = np.concatenate(send_idx)
+            d_core = self.p.xchg_dst_core[sid]
+            d_reg = self.p.xchg_dst_reg[sid]
+            vals = (jnp.concatenate(send_parts) if len(send_parts) > 1
+                    else send_parts[0])
+            if active is not None:
+                vals = jnp.where(active, vals, regs[d_core, d_reg])
+            regs = regs.at[d_core, d_reg].set(vals)
+        counters = counters.at[0].add(jnp.uint32(1) if active is None
+                                      else active.astype(jnp.uint32))
+        if self._pro_windows:
+            # cycle k+1's prologue (pure register carries) issues in cycle
+            # k's idle tail and commits only when cycle k raised nothing —
+            # an in-flight prologue is dropped on exception
+            pgate = jnp.all(flags == 0)
+            if active is not None:
+                pgate = pgate & active
+            regs = self._exec_windows(
+                self._pro_windows, regs, spads, gmem, flags, tags,
+                counters, pgate, [], [])[0]
+        return (regs, spads, gmem, flags, tags, counters)
+
+    def _exec_windows(self, windows, regs, spads, gmem, flags, tags,
+                      counters, active, send_idx, send_parts):
+        """Execute a list of static unrolled windows on the given leaves;
+        SEND captures are appended to ``send_idx``/``send_parts`` for the
+        caller's exchange scatter. ``active`` (None, or a scalar bool per
+        batch element) gates every write site individually."""
         gate = ((lambda p: p) if active is None
                 else (lambda p: p & active))
         hw = self.p.hw
         S = max(self.spad0.shape[1], 1)
         G = max(self.gmem0.shape[0], 1)
-        send_idx, send_parts = [], []
 
-        for wi in self._windows:
+        for wi in windows:
             (lane, c_arr, wops, wr_rows, st_rows, send_rows, exp_rows,
              glb_rows) = wi
             imm = lane[:, 6].astype(np.uint32)
@@ -640,19 +740,7 @@ class Machine:
                                         jnp.uint32(hw.cache_miss_stall),
                                         jnp.uint32(0))))
 
-        # ---- BSP exchange: one scatter from the captured SEND values ----
-        if self.n_sends:
-            sid = np.concatenate(send_idx)
-            d_core = self.p.xchg_dst_core[sid]
-            d_reg = self.p.xchg_dst_reg[sid]
-            vals = (jnp.concatenate(send_parts) if len(send_parts) > 1
-                    else send_parts[0])
-            if active is not None:
-                vals = jnp.where(active, vals, regs[d_core, d_reg])
-            regs = regs.at[d_core, d_reg].set(vals)
-        counters = counters.at[0].add(jnp.uint32(1) if active is None
-                                      else active.astype(jnp.uint32))
-        return (regs, spads, gmem, flags, tags, counters)
+        return regs, spads, gmem, flags, tags, counters
 
     def _chunk_impl(self, cyc, budget, carry):
         """K predicated Vcycles under one scan: a Vcycle whose start state
@@ -796,6 +884,10 @@ class BatchedMachine(Machine):
             self.bgmem0 = jnp.asarray(
                 np.stack([np.asarray(gi) for _, _, gi in images]), U32)
         self.B = B
+        if self.Tpro:
+            # iteration 0's prologue, once per stimulus (pure — regs only)
+            self.breg0 = jax.vmap(self._apply_prologue)(
+                self.breg0, self.bspad0, self.bgmem0)
         self.backend = backend
         # B=1 pays the plain specialized graph, not a vmap wrapper around it
         self._plain = backend != "pallas" and B == 1

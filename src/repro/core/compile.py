@@ -26,7 +26,9 @@ from .partition import Partition, SendEdge, partition
 from .place import PLACEMENTS, hop_cost, place
 from .regalloc import CoreAlloc, allocate
 from .remat import rematerialize
-from .schedule import ScheduleResult, schedule, validate_schedule
+from .retime import plan_retime
+from .schedule import (PIPELINES, PipelineInfo, ScheduleResult,
+                       pipeline_schedule, schedule, validate_schedule)
 
 
 @dataclass
@@ -55,6 +57,11 @@ class Program:
     # demand for Programs built by hand, e.g. in tests): per-slot opcode
     # bitmask over the used cores, bit i set iff Op(i) appears in slot i.
     slot_op_mask: Optional[np.ndarray] = None      # [T] uint64
+    # cross-Vcycle pipelining: the first pipe_prologue code slots are the
+    # retimed prologue of the *next* Vcycle — the engines execute them at
+    # the end of each cycle on post-exchange state, gated on "no exception
+    # raised" (0 = unpipelined; see core.schedule.PipelineInfo)
+    pipe_prologue: int = 0
 
     @property
     def num_cores(self) -> int:
@@ -287,6 +294,7 @@ class _Arm:
     war_edges: List[List[Tuple[int, int]]]
     order_edges: List[List[Tuple[int, int]]]
     share: List[Dict[int, int]]
+    commit_def: List[Dict[int, int]]
     commit_movs: int
     shared_commits: int
     remat_stats: Dict[str, int]
@@ -347,6 +355,9 @@ def _compile_arm(name: str, core_of_proc: List[int], low: Lowered,
     war_edges: List[List[Tuple[int, int]]] = [[] for _ in range(nproc)]
     order_edges: List[List[Tuple[int, int]]] = [[] for _ in range(nproc)]
     share: List[Dict[int, int]] = [dict() for _ in range(nproc)]
+    # cur vreg -> index of its committing instr (shared def or commit MOV):
+    # the pipeliner derives commit-visibility slots from this
+    commit_def: List[Dict[int, int]] = [dict() for _ in range(nproc)]
     commit_movs = 0
     shared_commits = 0
     # incremental dependence graph per process (RAW + accepted WAR edges):
@@ -370,6 +381,7 @@ def _compile_arm(name: str, core_of_proc: List[int], low: Lowered,
             # share machine register: next value lands in cur's register,
             # WAR edges force every read of cur to issue first.
             share[p][nxt] = cur
+            commit_def[p][cur] = def_idx
             war_edges[p] += [(r, def_idx) for r in readers]
             for r in readers:
                 adj.setdefault(r, []).append(def_idx)
@@ -378,6 +390,7 @@ def _compile_arm(name: str, core_of_proc: List[int], low: Lowered,
             mov = Instr(Op.MOV, cur, (nxt,))
             instrs.append(mov)
             mi = len(instrs) - 1
+            commit_def[p][cur] = mi
             war_edges[p] += [(r, mi) for r in readers]
             adj.setdefault(def_idx, []).append(mi)
             for r in readers:
@@ -410,7 +423,7 @@ def _compile_arm(name: str, core_of_proc: List[int], low: Lowered,
 
     return _Arm(name, core_of_proc, part, proc_instrs, proc_tables,
                 send_dst_core, send_meta, war_edges, order_edges, share,
-                commit_movs, shared_commits, remat_stats, sched)
+                commit_def, commit_movs, shared_commits, remat_stats, sched)
 
 
 def compile_circuit(circuit: Circuit,
@@ -420,6 +433,7 @@ def compile_circuit(circuit: Circuit,
                     optimize: bool = True,
                     sched_strategy: str = "slack",
                     placement: Union[str, Sequence[int]] = "anneal",
+                    pipeline: str = "modulo",
                     check: bool = False,
                     timings: Optional[Dict[str, float]] = None) -> Program:
     """Compile ``circuit`` into an executable :class:`Program`.
@@ -433,10 +447,17 @@ def compile_circuit(circuit: Circuit,
     count and ships whichever of {annealed, identity} geometry schedules
     the lower VCPL; ``"identity"`` is the frozen process-p-on-core-p
     mapping; an explicit core list (one core id per process, all distinct)
-    is a testing hook. ``check=True`` re-validates the schedule against
-    the machine model (``core.schedule.validate_schedule``) before
-    emitting the binary."""
+    is a testing hook. ``pipeline`` enables cross-Vcycle modulo pipelining
+    (``"modulo"``, default): boundary retiming + overlap accounting ship a
+    steady-state initiation interval II < VCPL when legal, best-of-two
+    against the unpipelined schedule (``stats["pipeline_pick"]``);
+    ``"off"`` is the frozen unpipelined path. ``check=True`` re-validates
+    the schedule against the machine model
+    (``core.schedule.validate_schedule``) before emitting the binary."""
     hw = hw or HardwareConfig()
+    if pipeline not in PIPELINES:
+        raise ValueError(
+            f"unknown pipeline mode {pipeline!r}; choose from {PIPELINES}")
     tm: Dict[str, float] = {} if timings is None else timings
 
     t0 = time.perf_counter()
@@ -504,10 +525,63 @@ def compile_circuit(circuit: Circuit,
     part, core_of_proc, sched = best.part, best.core_of_proc, best.sched
     proc_instrs, proc_tables = best.proc_instrs, best.proc_tables
     send_meta, send_dst_core = best.send_meta, best.send_dst_core
-    share = best.share
+    share, commit_def = best.share, best.commit_def
     commit_movs, shared_commits = best.commit_movs, best.shared_commits
     remat_stats = best.remat_stats
     used = max(core_of_proc) + 1 if core_of_proc else 1
+
+    # ---- cross-Vcycle modulo pipelining (core.retime + pipeline_schedule):
+    # best-of-two ship rule — the pipelined schedule replaces the baseline
+    # only when its steady-state initiation interval beats the unpipelined
+    # VCPL; "off" (and a losing pipelined arm) leaves the baseline binary
+    # untouched bit for bit.
+    vcpl0 = sched.vcpl
+    crit_lb0 = int(sched.stats.get("crit_path_lb", 0))
+    pipe_pick = "off"
+    pipe_info: Optional[PipelineInfo] = None
+    if pipeline == "modulo":
+        t0 = time.perf_counter()
+        output_vregs: Set[int] = set()
+        for vregs in low.outputs.values():
+            output_vregs.update(vregs)
+        epi0 = int(sched.stats.get("epilogue", 0))
+        budget = max(0, vcpl0 - crit_lb0) + epi0
+        # three hoist arms: none (pure overlap accounting — the emitted
+        # stream stays the baseline), aggressive retime (committed-register
+        # sources visible by the critical-path bound), conservative retime
+        # (no committed-register sources at all)
+        hoists = [[set() for _ in range(nproc)]]
+        if budget > 0:
+            for theta in (crit_lb0, -1):
+                h = plan_retime(proc_instrs, core_of_proc, hw, sched, share,
+                                commit_def, best.war_edges, best.order_edges,
+                                output_vregs, theta=theta, budget=budget)
+                if h not in hoists:
+                    hoists.append(h)
+        best_pipe = None
+        best_key = None
+        for hoist in hoists:
+            r = pipeline_schedule(proc_instrs, core_of_proc, hw,
+                                  send_dst_core, best.war_edges,
+                                  best.order_edges, share, commit_def,
+                                  hoist, strategy=sched_strategy,
+                                  crit_path_lb=crit_lb0, base=sched)
+            if r is None:
+                continue
+            # ties go to the arm that retimes more work across the commit
+            # boundary: same modeled throughput, but the hoisted carries
+            # shorten the next iteration's critical head
+            key = (r[1].ii, -sum(len(h) for h in hoist))
+            if best_key is None or key < best_key:
+                best_pipe, best_key = r, key
+        tm["pipeline"] = time.perf_counter() - t0
+        if best_pipe is not None and best_pipe[1].ii < vcpl0:
+            pipe_pick = "modulo"
+            sched, pipe_info = best_pipe
+            if check:
+                validate_schedule(sched, proc_instrs, core_of_proc, hw,
+                                  send_dst_core, best.war_edges,
+                                  best.order_edges, pipeline=pipe_info)
 
     # ---- memory placement (resolve relocations) --------------------------
     spad_base: Dict[str, int] = {}
@@ -555,8 +629,12 @@ def compile_circuit(circuit: Circuit,
     allocs: List[Optional[CoreAlloc]] = [None] * hw.num_cores
     for p in range(nproc):
         c = core_of_proc[p]
+        # prologue carries live across the iteration boundary — their
+        # machine registers must not be recycled mid-stream
+        carries = ({proc_instrs[p][i].writes() for i in pipe_info.hoist[p]}
+                   if pipe_info is not None else None)
         allocs[c] = allocate(sched.cores[c].slots, pinned, share[p],
-                             hw.num_regs)
+                             hw.num_regs, no_recycle=carries)
     tm["regalloc"] = time.perf_counter() - t0
 
     # ---- emit binary -------------------------------------------------------
@@ -656,11 +734,20 @@ def compile_circuit(circuit: Circuit,
                  False))
         for mname, m in low.mems.items()}
     crit_lb = sched.stats.get("crit_path_lb", 0)
+    ship_vcpl = pipe_info.ii if pipe_info is not None else sched.vcpl
     stats.update({
         "optimize": bool(optimize),
         "sched_strategy": sched_strategy,
         "vcpl_over_lb": round(sched.vcpl / crit_lb, 4) if crit_lb else 0.0,
         "sched_seconds": round(tm.get("schedule", 0.0), 6),
+        "pipeline": pipeline,
+        "pipeline_pick": pipe_pick,
+        "vcpl_ii": ship_vcpl,
+        "vcpl_unpipelined": vcpl0,
+        "pipe_prologue_len": pipe_info.prologue_len if pipe_info else 0,
+        "pipe_hoisted": (pipe_info.stats["hoisted"] if pipe_info else 0),
+        "sched_minimal": (ship_vcpl <= crit_lb if pipe_info is not None
+                          else sched.stats.get("sched_minimal", False)),
         **remat_stats,
         "instrs_lowered": instrs_lowered,
         "instrs_opt": len(low.instrs),
@@ -687,6 +774,7 @@ def compile_circuit(circuit: Circuit,
         xchg_src_slot=np.array(xs_slot, dtype=np.int32),
         xchg_dst_core=np.array(xd_core, dtype=np.int32),
         xchg_dst_reg=np.array(xd_reg, dtype=np.int32),
-        t_compute=sched.t_compute, vcpl=sched.vcpl, used_cores=used,
+        t_compute=sched.t_compute, vcpl=ship_vcpl, used_cores=used,
         outputs=outputs, state_regs=state_regs, stats=stats,
-        slot_op_mask=op_masks)
+        slot_op_mask=op_masks,
+        pipe_prologue=pipe_info.prologue_len if pipe_info else 0)

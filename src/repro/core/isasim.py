@@ -43,10 +43,21 @@ class IsaSim:
         # per slot: one entry per opcode present, with the core batch
         # executing it (see compile.slot_groups)
         from .compile import slot_groups
-        self._slots = slot_groups(prog, C)
+        slots = slot_groups(prog, C)
         self._n_sends = prog.n_sends
         self._xd_core = prog.xchg_dst_core
         self._xd_reg = prog.xchg_dst_reg
+        # Rotated dispatch for modulo-pipelined programs: the first
+        # ``pipe_prologue`` slots of the stream are pure recomputations of
+        # the next Vcycle's hoisted carries.  They run once up front
+        # (iteration 0's prologue) and thereafter as a gated tail after each
+        # exchange, so every ``step()`` boundary observes fully committed
+        # architectural state.
+        self._P = int(prog.pipe_prologue)
+        self._pro = slots[:self._P]
+        self._body = slots[self._P:]
+        if self._P:
+            self._run_groups(self._pro)
 
     # ------------------------------------------------------------------
     def _exec_group(self, op: Op, cores, dst, s1, s2, s3, s4, imm,
@@ -150,16 +161,26 @@ class IsaSim:
         m = dst != 0
         self.regs[cores[m], dst[m]] = res[m]
 
+    def _run_groups(self, slot_list) -> None:
+        """Execute a list of slot groups against a throwaway send buffer."""
+        sbuf = np.zeros((self._n_sends + 1,), np.uint32)
+        for groups in slot_list:
+            for (op, cores, dst, s1, s2, s3, s4, imm, sid) in groups:
+                self._exec_group(op, cores, dst, s1, s2, s3, s4, imm,
+                                 sbuf, sid)
+
     def step(self) -> None:
         """One Vcycle: grouped vectorized slot loop + compact BSP exchange."""
         sbuf = np.zeros((self._n_sends + 1,), np.uint32)
-        for groups in self._slots:
+        for groups in self._body:
             for (op, cores, dst, s1, s2, s3, s4, imm, sid) in groups:
                 self._exec_group(op, cores, dst, s1, s2, s3, s4, imm,
                                  sbuf, sid)
         if self._n_sends:
             self.regs[self._xd_core, self._xd_reg] = sbuf[:self._n_sends]
         self.cycle += 1
+        if self._P and not self.flags.any():
+            self._run_groups(self._pro)
 
     def run(self, max_cycles: int) -> int:
         for _ in range(max_cycles):

@@ -27,12 +27,18 @@ class CoreAlloc:
 def allocate(slots: Sequence[Optional[Instr]],
              pinned_init: Dict[int, InitVal],
              share: Dict[int, int],
-             num_regs: int) -> CoreAlloc:
+             num_regs: int,
+             no_recycle: Optional[Set[int]] = None) -> CoreAlloc:
     """Allocate machine registers for one core.
 
     ``pinned_init``: leaf vregs (state/constants) and their initial values.
     ``share``: nxt vreg -> cur vreg register-sharing pairs (pre-validated).
+    ``no_recycle``: vregs whose machine register must stay private for the
+    whole stream — prologue carries of a modulo-pipelined schedule live
+    across the Vcycle boundary, so their register cannot be handed to a
+    later temporary even after their last in-stream read.
     """
+    keep = no_recycle or set()
     vmap: Dict[int, int] = {0: 0}  # vreg 0 == machine r0 == 0
     init: List[Tuple[int, InitVal]] = []
     next_reg = 1
@@ -89,7 +95,7 @@ def allocate(slots: Sequence[Optional[Instr]],
         for s in ins.srcs:
             if (last_use.get(s) == t and s in vmap and s != 0
                     and s not in pinned_init and s not in share
-                    and vmap[s] not in free):
+                    and s not in keep and vmap[s] not in free):
                 # never recycle a register another vreg still maps to via share
                 free.append(vmap[s])
     return CoreAlloc(vmap, init, next_reg)

@@ -47,12 +47,14 @@ import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from .isa import HardwareConfig, Instr, Op
+from .isa import HardwareConfig, Instr, Op, PURE_OPS
 
 RAW = 0
 ORDER = 1  # issue-order edge (memory order, WAR): latency 1
 
 STRATEGIES = ("greedy", "slack")
+PIPELINES = ("modulo", "off")
+MEM_OPS = (Op.LD, Op.ST, Op.GLD, Op.GST)
 
 
 @dataclass
@@ -123,13 +125,18 @@ def schedule(core_instrs: List[List[Instr]],
              send_dst_core: Dict[int, int],
              war_edges: List[List[Tuple[int, int]]],
              order_edges: List[List[Tuple[int, int]]],
-             strategy: str = "slack") -> ScheduleResult:
+             strategy: str = "slack",
+             min_ready: Optional[List[Dict[int, int]]] = None
+             ) -> ScheduleResult:
     """Schedule every process's instruction list onto its core.
 
     ``core_instrs[p]`` is process p's topo-ordered instruction list (SENDs
     included). ``war_edges[p]`` / ``order_edges[p]`` are (src_idx, dst_idx)
     issue-order constraints. ``send_dst_core`` maps id(instr) -> dst core.
     ``strategy`` selects the scheduling policy (see module docstring).
+    ``min_ready[p]`` maps instruction index -> earliest issue slot — the
+    modulo pipeliner uses it to keep body consumers of prologue-hoisted
+    values ``raw_latency`` slots downstream of their (rotated) producers.
     """
     if strategy not in STRATEGIES:
         raise ValueError(
@@ -169,7 +176,8 @@ def schedule(core_instrs: List[List[Instr]],
     sched_prio = None
     if strategy == "greedy":
         passres = _greedy_pass(core_instrs, core_of_proc, hw, send_dst_core,
-                               preds, succs, prio, ncores)
+                               preds, succs, prio, ncores,
+                               min_ready=min_ready)
     else:
         # Two cheap list-scheduling passes over the same machine model:
         # mobility priority wins on communication-heavy graphs (it drains
@@ -179,7 +187,8 @@ def schedule(core_instrs: List[List[Instr]],
         best = None
         for pr in ("mobility", "height"):
             pres = _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
-                               preds, succs, ncores, core_load, pr)
+                               preds, succs, ncores, core_load, pr,
+                               min_ready=min_ready)
             if best is None or _pass_vcpl(pres) < _pass_vcpl(best[0]):
                 best = (pres, pr)
         passres, sched_prio = best
@@ -205,19 +214,21 @@ def _pass_vcpl(passres) -> int:
 # ----------------------------------------------------------------------
 
 def _greedy_pass(core_instrs, core_of_proc, hw, send_dst_core,
-                 preds, succs, prio, ncores):
+                 preds, succs, prio, ncores, min_ready=None):
     L = hw.raw_latency
 
     n_sched: List[int] = [0] * len(core_instrs)
     sched_slot: List[List[int]] = [[-1] * len(ci) for ci in core_instrs]
     npreds_left = [[len(pp) for pp in preds[p]] for p in range(len(preds))]
     ready: List[List[int]] = [[] for _ in core_instrs]   # instr idxs
-    ready_time: List[Dict[int, int]] = [dict() for _ in core_instrs]
+    ready_time: List[Dict[int, int]] = [
+        dict(min_ready[p]) if min_ready else dict()
+        for p in range(len(core_instrs))]
     for p, instrs in enumerate(core_instrs):
         for i in range(len(instrs)):
             if npreds_left[p][i] == 0:
                 ready[p].append(i)
-                ready_time[p][i] = 0
+                ready_time[p].setdefault(i, 0)
 
     link_busy: Dict[Tuple[str, int, int], Set[int]] = {}
     arrival_busy: Dict[int, Set[int]] = {}
@@ -292,7 +303,8 @@ def _greedy_pass(core_instrs, core_of_proc, hw, send_dst_core,
 # ----------------------------------------------------------------------
 
 def _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
-                preds, succs, ncores, core_load, prio_mode="mobility"):
+                preds, succs, ncores, core_load, prio_mode="mobility",
+                min_ready=None):
     L = hw.raw_latency
     nproc = len(core_instrs)
 
@@ -317,9 +329,10 @@ def _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
     T_est = max(core_load.values(), default=0)
     for p, instrs in enumerate(core_instrs):
         n = len(instrs)
+        floor = min_ready[p] if min_ready else {}
         asap = [0] * n
         for i in range(n):
-            best = 0
+            best = floor.get(i, 0)
             for (j, kind) in preds[p][i]:
                 lat = L if kind == RAW else 1
                 if asap[j] + lat > best:
@@ -363,10 +376,12 @@ def _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
     # ready[p]: (mobility, -fanout, i) min-heaps.
     pend: List[List[Tuple[int, int]]] = [[] for _ in range(nproc)]
     ready: List[List[Tuple[int, int, int]]] = [[] for _ in range(nproc)]
+    sched_rt: List[Dict[int, int]] = [
+        dict(min_ready[p]) if min_ready else dict() for p in range(nproc)]
     for p, instrs in enumerate(core_instrs):
         for i in range(len(instrs)):
             if npreds_left[p][i] == 0:
-                heapq.heappush(pend[p], (0, i))
+                heapq.heappush(pend[p], (sched_rt[p].get(i, 0), i))
 
     link_busy: Dict[Tuple[str, int, int], Set[int]] = {}
     arrival_busy: Dict[int, Set[int]] = {}
@@ -390,8 +405,6 @@ def _slack_pass(core_instrs, core_of_proc, hw, send_dst_core,
                 sched_rt[p][j] = rt
             if npreds_left[p][j] == 0:
                 heapq.heappush(pend[p], (sched_rt[p].get(j, 0), j))
-
-    sched_rt: List[Dict[int, int]] = [dict() for _ in range(nproc)]
 
     def _reserve_send(p: int, i: int, ins: Instr, c: int, t: int) -> int:
         """Earliest collision-free slot >= t for this SEND: core slot free,
@@ -526,6 +539,483 @@ def _finish(core_slots, core_sends, recv_count, last_arrival, ncores, total,
 
 
 # ----------------------------------------------------------------------
+# cross-Vcycle modulo pipelining
+# ----------------------------------------------------------------------
+
+@dataclass
+class PipelineInfo:
+    """Modulo-pipelining overlay for a combined prologue+body schedule.
+
+    The combined stream (``span`` slots: prologue ``[0, P)``, body compute,
+    epilogue replays) is launched every ``ii`` slots in steady state.  All
+    legality is expressed through per-commit *visibility slots* sigma — the
+    slot at which a committed current-register value becomes readable:
+
+      * local commit (shared next-value def or commit MOV) issued at slot
+        ``d``: sigma = d + raw_latency (the write traverses the exec
+        pipeline);
+      * local move (self-send): applied with the exchange, sigma =
+        t_compute + 1;
+      * NoC message replayed with 1-based epilogue rank ``r``: sigma =
+        t_compute + r, occupying destination-core slot t_compute + r - 1.
+
+    A reader of current register ``v`` at slot ``s``: if ``s < sigma`` it
+    reads the *previous* iteration's commit, so the next launch must wait
+    for visibility — ``ii >= sigma - s``; if ``s >= sigma`` it reads this
+    iteration's value, so the *next* commit must not overtake it —
+    ``ii >= s - sigma + 1`` (commit-order safety).  Register WAR inside the
+    body is assumed away by modulo variable expansion (see docs); only
+    architectural state carries constraints: current registers (above),
+    prologue carries (``ii >= last_read - def + 1``), and scratchpad
+    ordering (iteration n+1's first memory op waits for iteration n's last
+    store: ``ii >= max_store_slot - min_mem_slot + 1`` per process/memory).
+    Resources repeat modulo ii: core issue slots (incl. replay slots), link
+    claims, and arrival slots must each be collision-free mod ii.
+    """
+    ii: int
+    prologue_len: int
+    span: int
+    hoist: List[Set[int]]                 # per-process hoisted instr idxs
+    share: List[Dict[int, int]]           # per-process nxt -> cur shares
+    commit_def: List[Dict[int, int]]      # per-process cur -> commit idx
+    replay_rank: Dict[int, int]           # id(SEND) -> 1-based replay rank
+    stats: Dict[str, float] = field(default_factory=dict)
+
+
+def _commit_sigma(core_instrs: List[List[Instr]],
+                  core_of_proc: List[int],
+                  hw: HardwareConfig,
+                  send_dst_core: Dict[int, int],
+                  commit_def: List[Dict[int, int]],
+                  slot_of: List[List[int]],
+                  t_comp: int,
+                  replay_rank: Optional[Dict[int, int]] = None):
+    """Visibility slot per (proc, current vreg); assigns replay ranks.
+
+    When ``replay_rank`` is None, ranks are chosen per destination core by
+    ascending earliest-reader slot (unread messages last) — the replay
+    order is free (the engine exchange is an atomic scatter), and this
+    choice minimizes ``max(sigma - s_min)`` over inbound messages.  When
+    given, the supplied ranks are used (validator mode).
+    """
+    L = hw.raw_latency
+    nproc = len(core_instrs)
+    big = 1 << 30
+    sigma: List[Dict[int, int]] = [{} for _ in range(nproc)]
+    for p, cd in enumerate(commit_def):
+        for cur, di in cd.items():
+            sigma[p][cur] = slot_of[p][di] + L
+
+    # earliest read slot per (proc, vreg) — drives the replay order
+    reader_min: Dict[Tuple[int, int], int] = {}
+    for q, qinstrs in enumerate(core_instrs):
+        for i, ins in enumerate(qinstrs):
+            s = slot_of[q][i]
+            for src in ins.srcs:
+                k = (q, src)
+                if s < reader_min.get(k, big):
+                    reader_min[k] = s
+
+    inbound: Dict[int, List[Tuple[int, int, int, int, Instr]]] = {}
+    for p, instrs in enumerate(core_instrs):
+        c = core_of_proc[p]
+        for i, ins in enumerate(instrs):
+            if ins.op != Op.SEND:
+                continue
+            q, v = ins.send_dst_proc, ins.send_dst_vreg
+            dst = send_dst_core[id(ins)]
+            ts = slot_of[p][i]
+            if dst == c:
+                if q is not None and v:
+                    sigma[q][v] = t_comp + 1
+                continue
+            smin = reader_min.get((q, v), big) if q is not None else big
+            inbound.setdefault(dst, []).append((smin, ts, p, i, ins))
+
+    ranks: Dict[int, int] = {}
+    for dst, lst in inbound.items():
+        if replay_rank is None:
+            lst.sort(key=lambda e: (e[0], e[1], e[2], e[3]))
+            order = list(enumerate(lst, start=1))
+        else:
+            order = []
+            for e in lst:
+                r = replay_rank.get(id(e[4]))
+                if r is None:
+                    raise ValueError(
+                        f"inbound SEND to core {dst} has no replay rank")
+                order.append((r, e))
+            if sorted(r for r, _ in order) != list(range(1, len(lst) + 1)):
+                raise ValueError(
+                    f"replay ranks at core {dst} are not a permutation of "
+                    f"1..{len(lst)}")
+        for r, (_smin, _ts, _p, _i, ins) in order:
+            ranks[id(ins)] = r
+            q, v = ins.send_dst_proc, ins.send_dst_vreg
+            if q is not None and v:
+                sigma[q][v] = t_comp + r
+    return sigma, ranks
+
+
+def _pipeline_floors(core_instrs: List[List[Instr]],
+                     hoist: List[Set[int]],
+                     sigma: List[Dict[int, int]],
+                     slot_of: List[List[int]]) -> int:
+    """Largest data-hazard lower bound on the initiation interval."""
+    ii = 1
+    for p, instrs in enumerate(core_instrs):
+        mem_lo: Dict[str, int] = {}
+        mem_st: Dict[str, int] = {}
+        for i, ins in enumerate(instrs):
+            s = slot_of[p][i]
+            for src in set(ins.srcs):
+                sg = sigma[p].get(src)
+                if sg is None:
+                    continue
+                if s < sg:
+                    ii = max(ii, sg - s)          # cross-iteration RAW
+                else:
+                    ii = max(ii, s - sg + 1)      # commit-order safety
+            if ins.op in MEM_OPS:
+                m = ins.mem or "?"
+                if m not in mem_lo or s < mem_lo[m]:
+                    mem_lo[m] = s
+                if ins.op in (Op.ST, Op.GST):
+                    if m not in mem_st or s > mem_st[m]:
+                        mem_st[m] = s
+        for m, st in mem_st.items():
+            ii = max(ii, st - mem_lo[m] + 1)      # stores drain before reuse
+        for i in hoist[p]:
+            w = instrs[i].writes()
+            d = slot_of[p][i]
+            for j, jins in enumerate(instrs):
+                if j != i and w in jins.srcs:
+                    ii = max(ii, slot_of[p][j] - d + 1)   # carry WAR
+    return ii
+
+
+def _modulo_conflict(ii: int,
+                     busy: List[Set[int]],
+                     link_busy: Dict[Tuple[str, int, int], Set[int]],
+                     arrival_busy: Dict[int, Set[int]]) -> bool:
+    for grp in busy:
+        if len({s % ii for s in grp}) != len(grp):
+            return True
+    for grp in link_busy.values():
+        if len({s % ii for s in grp}) != len(grp):
+            return True
+    for grp in arrival_busy.values():
+        if len({s % ii for s in grp}) != len(grp):
+            return True
+    return False
+
+
+def _repair_modulo(comb: ScheduleResult,
+                   core_instrs: List[List[Instr]],
+                   core_of_proc: List[int],
+                   hw: HardwareConfig,
+                   preds, succs,
+                   P: int, ii: int,
+                   slot_of: List[List[int]]):
+    """Try to make every core's issue/replay slots distinct modulo ``ii``
+    by relocating instructions into free slots.
+
+    Steady-state collisions are almost always the epilogue replay tail of
+    iteration n wrapping onto the stream head of iteration n+1 — and the
+    head instructions usually have slack.  A colliding instruction may move
+    to any free slot of its core inside its dependence window (RAW
+    distance ``raw_latency``, order edges distance 1, body region
+    ``[P, t_compute)``) whose residue mod ii is unclaimed.  Replay slots
+    and SENDs (whose link/arrival claims are frozen) never move.  Returns
+    ``(per-core slot lists, per-proc slot positions)`` or ``None`` when
+    some collision is unresolvable at this ii.  The caller re-verifies the
+    repaired placement from scratch (moves shift commit visibility and
+    reader slots, so the data-hazard floor must be recomputed).
+    """
+    L = hw.raw_latency
+    t_comp = comb.t_compute
+    ncores = len(comb.cores)
+    slots_c = [list(cp.slots) for cp in comb.cores]
+    pos = [list(sl) for sl in slot_of]
+    owner: List[Dict[int, Tuple[int, int]]] = [{} for _ in range(ncores)]
+    for p in range(len(core_instrs)):
+        c = core_of_proc[p]
+        for i, s in enumerate(pos[p]):
+            owner[c][s] = (p, i)
+
+    for c in range(ncores):
+        busy = {s for s, x in enumerate(slots_c[c]) if x is not None}
+        busy |= {t_comp + r for r in range(comb.cores[c].recv_count)}
+        if len(busy) > ii:
+            return None
+        res_used: Dict[int, List[int]] = {}
+        for s in sorted(busy):
+            res_used.setdefault(s % ii, []).append(s)
+        for r in sorted(res_used):
+            group = res_used[r]
+            if len(group) <= 1:
+                continue
+            movable = [s for s in group
+                       if s < t_comp and slots_c[c][s] is not None
+                       and slots_c[c][s].op != Op.SEND]
+            if len(group) - len(movable) > 1:
+                return None        # two immovable occupants share a residue
+            need_move = movable if len(movable) < len(group) \
+                else movable[1:]   # all movable: keep the earliest
+            for s in need_move:
+                p, i = owner[c][s]
+                # an instruction never crosses the prologue/body boundary
+                # during repair: hoisted carries stay in [0, P), body work
+                # stays in [P, t_compute)
+                lo, hi = (0, P - 1) if s < P else (P, t_comp - 1)
+                for (j, kind) in preds[p][i]:
+                    lo = max(lo, pos[p][j] + (L if kind == RAW else 1))
+                for (j, kind) in succs[p][i]:
+                    hi = min(hi, pos[p][j] - (L if kind == RAW else 1))
+                s2 = None
+                for cand in range(lo, hi + 1):
+                    if slots_c[c][cand] is None and cand % ii not in res_used:
+                        s2 = cand
+                        break
+                if s2 is None:
+                    return None
+                slots_c[c][s2] = slots_c[c][s]
+                slots_c[c][s] = None
+                del owner[c][s]
+                owner[c][s2] = (p, i)
+                pos[p][i] = s2
+                group.remove(s)
+                res_used[s2 % ii] = [s2]
+    return slots_c, pos
+
+
+def _resource_sets(res: ScheduleResult, hw: HardwareConfig,
+                   send_dst_core: Dict[int, int]):
+    """Core-busy / link / arrival claim sets of a combined schedule."""
+    busy: List[Set[int]] = []
+    for cp in res.cores:
+        b = {s for s, x in enumerate(cp.slots) if x is not None}
+        b |= {res.t_compute + r for r in range(cp.recv_count)}
+        busy.append(b)
+    link_busy: Dict[Tuple[str, int, int], Set[int]] = {}
+    arrival_busy: Dict[int, Set[int]] = {}
+    for c, cp in enumerate(res.cores):
+        for (ts, ins) in cp.sends:
+            dst = send_dst_core[id(ins)]
+            links = _route(hw, c, dst)
+            for k, lk in enumerate(links):
+                link_busy.setdefault(lk, set()).add(
+                    ts + 1 + k * hw.send_latency)
+            if links:
+                arrival_busy.setdefault(dst, set()).add(
+                    ts + 1 + len(links) * hw.send_latency)
+    return busy, link_busy, arrival_busy
+
+
+def pipeline_schedule(core_instrs: List[List[Instr]],
+                      core_of_proc: List[int],
+                      hw: HardwareConfig,
+                      send_dst_core: Dict[int, int],
+                      war_edges: List[List[Tuple[int, int]]],
+                      order_edges: List[List[Tuple[int, int]]],
+                      share: List[Dict[int, int]],
+                      commit_def: List[Dict[int, int]],
+                      hoist: List[Set[int]],
+                      strategy: str = "slack",
+                      crit_path_lb: int = 0,
+                      base: Optional[ScheduleResult] = None
+                      ) -> Optional[Tuple[ScheduleResult, PipelineInfo]]:
+    """Modulo-pipeline one Vcycle: hoist ``hoist[p]`` into a prologue,
+    reschedule the body, and compute the steady-state initiation interval.
+
+    Returns ``(combined, info)`` — the combined prologue+body schedule
+    (``info.span == combined.vcpl`` slots) and the pipelining overlay — or
+    ``None`` when no II strictly below the combined span is legal (then
+    pipelining cannot beat the barrier machine and the caller ships the
+    baseline).  With an empty hoist and ``base`` given, the body schedule
+    is reused verbatim, so the emitted program is bit-identical to the
+    unpipelined one and the pass is pure overlap accounting.
+    """
+    L = hw.raw_latency
+    ncores = hw.num_cores
+    nproc = len(core_instrs)
+    total = sum(len(ci) for ci in core_instrs)
+    empty = all(not h for h in hoist)
+    preds_all, succs_all = _build_deps(core_instrs, war_edges, order_edges)
+
+    # ---- prologue placement (once; independent of body rescheduling):
+    # hoisted instrs in topo order, earliest slot >= every hoisted RAW
+    # predecessor + raw_latency, first free slot on the core (the hoist
+    # set is ancestor-closed, so all RAW preds of a hoisted instr are
+    # hoisted)
+    pro_slot: List[Dict[int, int]] = [{} for _ in range(nproc)]
+    occupied: List[Set[int]] = [set() for _ in range(ncores)]
+    for p, instrs in enumerate(core_instrs):
+        c = core_of_proc[p]
+        for i in sorted(hoist[p]):
+            lo = 0
+            for (j, kind) in preds_all[p][i]:
+                if kind == RAW and j in hoist[p]:
+                    lo = max(lo, pro_slot[p][j] + L)
+            while lo in occupied[c]:
+                lo += 1
+            occupied[c].add(lo)
+            pro_slot[p][i] = lo
+    P = 1 + max((max(o) for o in occupied if o), default=-1)
+
+    # body = everything not hoisted; WAR edges whose reader is hoisted drop
+    # (the rotated reader consumes the *committed* value — the sigma
+    # constraints take over); memory-order endpoints are never hoistable
+    body_instrs: List[List[Instr]] = []
+    body_war: List[List[Tuple[int, int]]] = []
+    body_order: List[List[Tuple[int, int]]] = []
+    raw_floors: List[Dict[int, int]] = []
+    for p, instrs in enumerate(core_instrs):
+        h = hoist[p]
+        newidx: Dict[int, int] = {}
+        bl: List[Instr] = []
+        for i, ins in enumerate(instrs):
+            if i in h:
+                continue
+            newidx[i] = len(bl)
+            bl.append(ins)
+        body_instrs.append(bl)
+        body_war.append([(newidx[a], newidx[b]) for (a, b) in
+                         war_edges[p] if a not in h and b not in h])
+        body_order.append([(newidx[a], newidx[b]) for (a, b) in
+                           order_edges[p] if a not in h and b not in h])
+        fl: Dict[int, int] = {}
+        for i in newidx:
+            for (j, kind) in preds_all[p][i]:
+                if kind == RAW and j in h:
+                    lo = max(0, pro_slot[p][j] + L - P)
+                    if lo > fl.get(newidx[i], 0):
+                        fl[newidx[i]] = lo
+        raw_floors.append(fl)
+
+    def _assemble(extra: Optional[List[int]]) -> ScheduleResult:
+        """Combined prologue+body schedule; ``extra[p]`` is a head-clearance
+        floor (earliest body slot) for every instruction of process p."""
+        if empty and extra is None and base is not None:
+            return ScheduleResult(
+                [CoreProgram(list(cp.slots), cp.recv_count, list(cp.sends))
+                 for cp in base.cores],
+                base.t_compute, base.vcpl, dict(base.stats))
+        mr: Optional[List[Dict[int, int]]] = None
+        if extra is not None and any(extra):
+            mr = []
+            for p, bl in enumerate(body_instrs):
+                fl = dict(raw_floors[p])
+                if extra[p]:
+                    for i in range(len(bl)):
+                        if fl.get(i, 0) < extra[p]:
+                            fl[i] = extra[p]
+                mr.append(fl)
+        elif not empty:
+            mr = raw_floors
+        body = schedule(body_instrs, core_of_proc, hw, send_dst_core,
+                        body_war, body_order, strategy, min_ready=mr)
+        if empty and P == 0:
+            return body
+        comb_slots: List[List[Optional[Instr]]] = []
+        for c in range(ncores):
+            sl: List[Optional[Instr]] = [None] * P
+            sl.extend(body.cores[c].slots)
+            comb_slots.append(sl)
+        for p in range(nproc):
+            c = core_of_proc[p]
+            for i, s in pro_slot[p].items():
+                comb_slots[c][s] = core_instrs[p][i]
+        comb_sends = [[(ts + P, ins) for (ts, ins) in body.cores[c].sends]
+                      for c in range(ncores)]
+        recv = [cp.recv_count for cp in body.cores]
+        comb = _finish(comb_slots, comb_sends, recv, 0, ncores, total,
+                       crit_path_lb, hw, strategy)
+        if "sched_prio" in body.stats:
+            comb.stats["sched_prio"] = body.stats["sched_prio"]
+        return comb
+
+    def _floor_of(comb: ScheduleResult):
+        placed: List[Dict[int, int]] = [{} for _ in comb.cores]
+        for c, cp in enumerate(comb.cores):
+            for s, ins in enumerate(cp.slots):
+                if ins is not None:
+                    placed[c][id(ins)] = s
+        slot_of = [[placed[core_of_proc[p]][id(ins)] for ins in instrs]
+                   for p, instrs in enumerate(core_instrs)]
+        sigma, _ = _commit_sigma(core_instrs, core_of_proc, hw,
+                                 send_dst_core, commit_def, slot_of,
+                                 comb.t_compute)
+        floor = _pipeline_floors(core_instrs, hoist, sigma, slot_of)
+        busy, _lb, _ab = _resource_sets(comb, hw, send_dst_core)
+        return slot_of, max(floor, max((len(b) for b in busy), default=1))
+
+    def _attempt(comb: ScheduleResult, slot_of, floor: int, stop: int):
+        """Search II upward from the data/occupancy floor; at each
+        candidate repair modulo collisions by relocating slack
+        instructions, then re-verify the repaired placement from
+        scratch."""
+        span = comb.vcpl
+        t_comp = comb.t_compute
+        for ii in range(floor, min(span, stop)):
+            rep = _repair_modulo(comb, core_instrs, core_of_proc, hw,
+                                 preds_all, succs_all, P, ii, slot_of)
+            if rep is None:
+                continue
+            slots_c, pos = rep
+            cand = ScheduleResult(
+                [CoreProgram(slots_c[c], comb.cores[c].recv_count,
+                             comb.cores[c].sends)
+                 for c in range(ncores)],
+                t_comp, span, dict(comb.stats))
+            sigma2, ranks2 = _commit_sigma(core_instrs, core_of_proc, hw,
+                                           send_dst_core, commit_def, pos,
+                                           t_comp)
+            if _pipeline_floors(core_instrs, hoist, sigma2, pos) > ii:
+                continue
+            busy2, lb2, ab2 = _resource_sets(cand, hw, send_dst_core)
+            if _modulo_conflict(ii, busy2, lb2, ab2):
+                continue
+            info = PipelineInfo(
+                ii=ii, prologue_len=P, span=span, hoist=hoist, share=share,
+                commit_def=commit_def, replay_rank=ranks2,
+                stats={"ii": ii, "prologue_len": P, "span": span,
+                       "hoisted": sum(len(h) for h in hoist)})
+            return cand, info
+        return None
+
+    stop = base.vcpl if base is not None else (1 << 30)
+    comb = _assemble(None)
+    slot_of, floor = _floor_of(comb)
+    best = _attempt(comb, slot_of, floor, stop)
+    if best is not None:
+        stop = best[1].ii
+
+    # head-clearance rounds: the dominant steady-state collision is the
+    # epilogue replay tail of iteration n wrapping onto the stream head of
+    # iteration n+1 on the receiving cores.  Reschedule with a per-core
+    # min_ready floor that keeps each receiving core's head clear of its
+    # own wrapped replay residues, then search again; iterate while the
+    # data floor keeps moving (the delayed heads also delay replay-fed
+    # readers, which lowers the floor's sigma - s demand).
+    t_comp, target = comb.t_compute, floor
+    recv_of = [cp.recv_count for cp in comb.cores]
+    for _round in range(3):
+        extra = [max(0, t_comp + recv_of[core_of_proc[p]] - target)
+                 if recv_of[core_of_proc[p]] else 0 for p in range(nproc)]
+        if not any(extra):
+            break
+        comb = _assemble(extra)
+        slot_of, floor = _floor_of(comb)
+        got = _attempt(comb, slot_of, floor, stop)
+        if got is not None:
+            best, stop = got, got[1].ii
+        t_comp, target = comb.t_compute, floor
+        recv_of = [cp.recv_count for cp in comb.cores]
+    return best
+
+
+# ----------------------------------------------------------------------
 # independent validator
 # ----------------------------------------------------------------------
 
@@ -535,14 +1025,22 @@ def validate_schedule(res: ScheduleResult,
                       hw: HardwareConfig,
                       send_dst_core: Dict[int, int],
                       war_edges: List[List[Tuple[int, int]]],
-                      order_edges: List[List[Tuple[int, int]]]) -> Dict[str, int]:
+                      order_edges: List[List[Tuple[int, int]]],
+                      pipeline: Optional[PipelineInfo] = None
+                      ) -> Dict[str, int]:
     """Independently re-check a :class:`ScheduleResult` against the machine
     model: every instruction placed exactly once on its process's core, RAW
     def->use distance >= ``hw.raw_latency``, WAR/memory-order edges strictly
     respected, NoC link slots collision-free, arrival slots unique per
     destination and within ``t_compute``, receive counts and VCPL
     consistent. Raises :class:`ValueError` on the first violation; returns
-    summary counts when the schedule is valid."""
+    summary counts when the schedule is valid.
+
+    With ``pipeline`` given the modulo overlay is checked too: prologue
+    region purity, commit visibility recomputation, cross-iteration RAW
+    distances and commit-order safety, prologue-carry WAR, cross-iteration
+    memory ordering, and core/link/arrival claims collision-free modulo the
+    initiation interval (see :class:`PipelineInfo`)."""
     L = hw.raw_latency
     # the partitioner duplicates instruction *objects* across processes
     # (cone duplication), so placement is keyed per core, where each object
@@ -629,4 +1127,93 @@ def validate_schedule(res: ScheduleResult,
         raise ValueError(
             f"vcpl {res.vcpl} != t_compute {res.t_compute} + epilogue "
             f"{epilogue}")
+
+    if pipeline is not None:
+        _validate_pipeline(res, core_instrs, core_of_proc, hw,
+                           send_dst_core, placed, pipeline)
     return {"instrs": n_placed, "sends": len(send_ids)}
+
+
+def _validate_pipeline(res: ScheduleResult,
+                       core_instrs: List[List[Instr]],
+                       core_of_proc: List[int],
+                       hw: HardwareConfig,
+                       send_dst_core: Dict[int, int],
+                       placed: List[Dict[int, int]],
+                       info: PipelineInfo) -> None:
+    """Modulo-overlay legality (see :class:`PipelineInfo` for the model)."""
+    L = hw.raw_latency
+    ii, P, span = info.ii, info.prologue_len, info.span
+    t_comp = res.t_compute
+    if span != res.vcpl:
+        raise ValueError(f"pipeline span {span} != schedule vcpl {res.vcpl}")
+    if not 1 <= ii < span:
+        raise ValueError(f"initiation interval {ii} outside [1, {span})")
+
+    slot_of = [[placed[core_of_proc[p]][id(ins)] for ins in instrs]
+               for p, instrs in enumerate(core_instrs)]
+
+    # prologue region purity: slots [0, P) hold exactly the hoisted instrs,
+    # every hoisted op is a pure register op, and no SEND issues there
+    hoistable = PURE_OPS | {Op.LUT}
+    hoist_ids: Set[int] = set()
+    for p, h in enumerate(info.hoist):
+        for i in h:
+            ins = core_instrs[p][i]
+            hoist_ids.add(id(ins))
+            if ins.op not in hoistable or ins.writes() is None:
+                raise ValueError(
+                    f"hoisted instr proc {p} idx {i} is not a pure "
+                    f"register op: {ins!r}")
+            if slot_of[p][i] >= P:
+                raise ValueError(
+                    f"hoisted instr proc {p} idx {i} at slot "
+                    f"{slot_of[p][i]} outside prologue [0, {P})")
+    for c, cp in enumerate(res.cores):
+        for s in range(min(P, len(cp.slots))):
+            ins = cp.slots[s]
+            if ins is not None and id(ins) not in hoist_ids:
+                raise ValueError(
+                    f"non-hoisted instr in prologue region: core {c} "
+                    f"slot {s}: {ins!r}")
+        for (ts, _ins) in cp.sends:
+            if ts < P:
+                raise ValueError(
+                    f"SEND in prologue region: core {c} slot {ts}")
+
+    # recompute commit visibility under the recorded replay ranks (raises
+    # if the ranks are not a per-core permutation of the inbound messages)
+    for p, cd in enumerate(info.commit_def):
+        for cur, di in cd.items():
+            ins = core_instrs[p][di]
+            w = ins.writes()
+            shared = w is not None and info.share[p].get(w) == cur
+            moved = ins.op == Op.MOV and ins.dst == cur
+            if not (shared or moved):
+                raise ValueError(
+                    f"commit_def proc {p} vreg {cur}: instr {di} is "
+                    f"neither a shared def nor a commit MOV: {ins!r}")
+    sigma, _ranks = _commit_sigma(core_instrs, core_of_proc, hw,
+                                  send_dst_core, info.commit_def, slot_of,
+                                  t_comp, replay_rank=info.replay_rank)
+
+    # cross-iteration RAW / commit-order, carry WAR, memory ordering
+    need = _pipeline_floors(core_instrs, info.hoist, sigma, slot_of)
+    if ii < need:
+        raise ValueError(
+            f"initiation interval {ii} below data-hazard floor {need} "
+            f"(cross-iteration RAW / commit order / carry WAR / memory)")
+
+    # resource claims must repeat collision-free modulo ii
+    busy, link_busy, arrival_busy = _resource_sets(res, hw, send_dst_core)
+    for c, grp in enumerate(busy):
+        if len({s % ii for s in grp}) != len(grp):
+            raise ValueError(
+                f"core {c} issue/replay slots collide modulo {ii}")
+    for lk, grp in link_busy.items():
+        if len({s % ii for s in grp}) != len(grp):
+            raise ValueError(f"link {lk} claims collide modulo {ii}")
+    for dst, grp in arrival_busy.items():
+        if len({s % ii for s in grp}) != len(grp):
+            raise ValueError(
+                f"arrival slots at core {dst} collide modulo {ii}")

@@ -98,6 +98,7 @@ def make_vcycle_chunk(program, C: int, K: int, interpret: bool = True,
     dreg_j = jnp.asarray(np.pad(program.xchg_dst_reg, (0, 1 - n_sends))
                          if n_sends == 0 else program.xchg_dst_reg)
     op_set = program.op_set()
+    num_pro = int(getattr(program, "pipe_prologue", 0))
     pad_c = Cp - C
 
     if batch is not None:
@@ -112,7 +113,8 @@ def make_vcycle_chunk(program, C: int, K: int, interpret: bool = True,
             regs_o, spads_o, flags_o, nexec = vcycle_chunk_pallas_batched(
                 code_j, cap_j, luts_j, dcore_j, dreg_j, regs_p, spads_p,
                 flags_p, cyc.astype(jnp.int32), budget_a, K=K,
-                n_sends=n_sends, op_set=op_set, interpret=interpret)
+                n_sends=n_sends, op_set=op_set, num_pro=num_pro,
+                interpret=interpret)
             counters = counters.at[:, 0].add(nexec.astype(jnp.uint32))
             carry = (regs_o[:, :C], spads_o[:, :C], gmem,
                      flags_o[:, :C], tags, counters)
@@ -130,7 +132,7 @@ def make_vcycle_chunk(program, C: int, K: int, interpret: bool = True,
         regs_o, spads_o, flags_o, nexec = vcycle_chunk_pallas(
             code_j, cap_j, luts_j, dcore_j, dreg_j, regs_p, spads_p,
             flags_p, cyc_a, budget_a, K=K, n_sends=n_sends, op_set=op_set,
-            interpret=interpret)
+            num_pro=num_pro, interpret=interpret)
         counters = counters.at[0].add(nexec[0].astype(jnp.uint32))
         carry = (regs_o[:C], spads_o[:C], gmem, flags_o[:C], tags, counters)
         return cyc + nexec[0], carry

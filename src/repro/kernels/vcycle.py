@@ -200,10 +200,18 @@ def _chunk_kernel(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
                   dcore_ref, dreg_ref, regs_in_ref, spads_in_ref,
                   flags_in_ref, regs_out_ref, spads_out_ref, flags_out_ref,
                   nexec_ref, *, num_slots: int, K: int, n_sends: int,
-                  op_set, spad_words: int):
+                  op_set, spad_words: int, num_pro: int = 0):
     """Shapes: code [T, C, 7] i32 | cap [T, C] i32 | luts [C, L, 16] u32 |
     dcore/dreg [max(n_sends,1)] i32 | regs [C, R] u32 | spads [C, S] u32 |
-    flags [C] u32 | cyc/budget/nexec (1,) i32 scalars (SMEM)."""
+    flags [C] u32 | cyc/budget/nexec (1,) i32 scalars (SMEM).
+
+    ``num_pro > 0`` marks a modulo-pipelined program: code rows
+    ``[0, num_pro)`` are the *next* Vcycle's hoisted pure ops. Each Vcycle
+    runs the steady-state body (rows ``[num_pro, T)``), the exchange, then
+    the prologue on the post-exchange state — committed (register carries
+    only) iff the cycle raised no exception, so a raising cycle never
+    commits cycle k+1's in-flight prologue. Iteration 0's prologue is
+    applied by ``Machine.init_state``."""
     luts = luts_ref[...]
     # the slot executor is the same partially-evaluated step the jnp engine
     # scans over; the privileged gmem/cache path never appears here
@@ -225,11 +233,17 @@ def _chunk_kernel(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
 
         sbuf0 = jnp.zeros((n_sends + 1,), U32)
         regs2, spads2, _, flags2, _, _, sbuf = jax.lax.fori_loop(
-            0, num_slots, slot,
+            num_pro, num_slots, slot,
             (regs, spads, dummy_gmem, flags, dummy_tags, dummy_cnt, sbuf0))
         if n_sends:
             regs2 = regs2.at[dcore_ref[...], dreg_ref[...]].set(
                 sbuf[:n_sends])
+        if num_pro:
+            regs3 = jax.lax.fori_loop(
+                0, num_pro, slot,
+                (regs2, spads2, dummy_gmem, flags2, dummy_tags, dummy_cnt,
+                 sbuf0))[0]
+            regs2 = jnp.where(jnp.all(flags2 == 0), regs3, regs2)
         regs = jnp.where(active, regs2, regs)
         spads = jnp.where(active, spads2, spads)
         flags = jnp.where(active, flags2, flags)
@@ -249,14 +263,16 @@ def _chunk_kernel_batched(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
                           dcore_ref, dreg_ref, regs_in_ref, spads_in_ref,
                           flags_in_ref, regs_out_ref, spads_out_ref,
                           flags_out_ref, nexec_ref, *, num_slots: int, K: int,
-                          n_sends: int, op_set, spad_words: int):
+                          n_sends: int, op_set, spad_words: int,
+                          num_pro: int = 0):
     """Batched-stimulus variant of ``_chunk_kernel``: one grid step per
     batch element. The shared program (code/cap/luts/exchange tables) is the
     same block for every step; the per-element state blocks are
     [1, C, R]/[1, C, S]/[1, C] so each element's registers and scratchpads
     stay VMEM-resident across all K Vcycles of its chunk. Exceptions are
     per element: this element's flags predicate only this element's
-    Vcycles."""
+    Vcycles (including its own in-flight prologue when ``num_pro > 0`` —
+    see ``_chunk_kernel``)."""
     luts = luts_ref[...]
     step = make_slot_step(luts, spad_words, 1, 1, 1, 0, 0, op_set=op_set)
     dummy_gmem = jnp.zeros((1,), U32)
@@ -274,11 +290,17 @@ def _chunk_kernel_batched(cyc_ref, budget_ref, code_ref, cap_ref, luts_ref,
 
         sbuf0 = jnp.zeros((n_sends + 1,), U32)
         regs2, spads2, _, flags2, _, _, sbuf = jax.lax.fori_loop(
-            0, num_slots, slot,
+            num_pro, num_slots, slot,
             (regs, spads, dummy_gmem, flags, dummy_tags, dummy_cnt, sbuf0))
         if n_sends:
             regs2 = regs2.at[dcore_ref[...], dreg_ref[...]].set(
                 sbuf[:n_sends])
+        if num_pro:
+            regs3 = jax.lax.fori_loop(
+                0, num_pro, slot,
+                (regs2, spads2, dummy_gmem, flags2, dummy_tags, dummy_cnt,
+                 sbuf0))[0]
+            regs2 = jnp.where(jnp.all(flags2 == 0), regs3, regs2)
         regs = jnp.where(active, regs2, regs)
         spads = jnp.where(active, spads2, spads)
         flags = jnp.where(active, flags2, flags)
@@ -299,7 +321,7 @@ def vcycle_chunk_pallas_batched(code: jax.Array, cap: jax.Array,
                                 spads: jax.Array, flags: jax.Array,
                                 cyc: jax.Array, budget: jax.Array, *,
                                 K: int, n_sends: int, op_set=None,
-                                interpret: bool = True,
+                                num_pro: int = 0, interpret: bool = True,
                                 ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                            jax.Array]:
     """Up to K Vcycles for B whole machines in one launch (grid over B).
@@ -320,7 +342,7 @@ def vcycle_chunk_pallas_batched(code: jax.Array, cap: jax.Array,
 
     kernel = functools.partial(
         _chunk_kernel_batched, num_slots=T, K=K, n_sends=n_sends,
-        op_set=op_set, spad_words=max(S, 1))
+        op_set=op_set, spad_words=max(S, 1), num_pro=num_pro)
     smem = lambda shp, im: pl.BlockSpec(shp, im,
                                         memory_space=pltpu.SMEM)
     out_shapes = (
@@ -359,7 +381,8 @@ def vcycle_chunk_pallas(code: jax.Array, cap: jax.Array, luts: jax.Array,
                         dcore: jax.Array, dreg: jax.Array, regs: jax.Array,
                         spads: jax.Array, flags: jax.Array, cyc: jax.Array,
                         budget: jax.Array, *, K: int, n_sends: int,
-                        op_set=None, interpret: bool = True,
+                        op_set=None, num_pro: int = 0,
+                        interpret: bool = True,
                         ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                    jax.Array]:
     """Up to K Vcycles for the whole machine in one launch (exchange
@@ -370,7 +393,7 @@ def vcycle_chunk_pallas(code: jax.Array, cap: jax.Array, luts: jax.Array,
 
     kernel = functools.partial(
         _chunk_kernel, num_slots=T, K=K, n_sends=n_sends, op_set=op_set,
-        spad_words=max(S, 1))
+        spad_words=max(S, 1), num_pro=num_pro)
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
     out_shapes = (

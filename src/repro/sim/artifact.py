@@ -81,6 +81,7 @@ def save_program(prog: Program, path: Union[str, Path]) -> Path:
         "t_compute": int(prog.t_compute),
         "vcpl": int(prog.vcpl),
         "used_cores": int(prog.used_cores),
+        "pipe_prologue": int(prog.pipe_prologue),
         "outputs": {nm: [int(core), [int(r) for r in mregs]]
                     for nm, (core, mregs) in prog.outputs.items()},
         "state_regs": {
@@ -125,6 +126,7 @@ def load_program(path: Union[str, Path]) -> Program:
         t_compute=int(meta["t_compute"]),
         vcpl=int(meta["vcpl"]),
         used_cores=int(meta["used_cores"]),
+        pipe_prologue=int(meta.get("pipe_prologue", 0)),
         outputs={nm: (core, list(mregs))
                  for nm, (core, mregs) in meta["outputs"].items()},
         state_regs={nm: [[(c, r) for c, r in locs] for locs in words]

@@ -14,7 +14,7 @@ The cache key is a SHA-256 over:
   semantic difference does not),
 * every :class:`~repro.core.isa.HardwareConfig` field,
 * the compiler options (``strategy``, ``use_luts``, ``optimize``,
-  ``sched_strategy``, ``placement``),
+  ``sched_strategy``, ``placement``, ``pipeline``),
 * the artifact :data:`~repro.sim.artifact.FORMAT_VERSION` (a schema bump
   silently invalidates old entries — they just miss).
 
@@ -49,7 +49,7 @@ def default_cache_dir() -> Path:
 def cache_key(circuit: Circuit, hw: HardwareConfig, *,
               strategy: str = "balanced", use_luts: bool = True,
               optimize: bool = True, sched_strategy: str = "slack",
-              placement: str = "anneal") -> str:
+              placement: str = "anneal", pipeline: str = "modulo") -> str:
     """Deterministic key for one (circuit, hardware, options) request."""
     payload = json.dumps({
         "format_version": FORMAT_VERSION,
@@ -60,6 +60,7 @@ def cache_key(circuit: Circuit, hw: HardwareConfig, *,
         "optimize": bool(optimize),
         "sched_strategy": sched_strategy,
         "placement": placement,
+        "pipeline": pipeline,
     }, sort_keys=True)
     return hashlib.sha256(payload.encode("utf-8")).hexdigest()
 

@@ -251,7 +251,7 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
             scale: str = "full", seeds: Optional[Sequence[int]] = None,
             optimize: bool = True, use_luts: bool = True,
             strategy: str = "balanced", sched_strategy: str = "slack",
-            placement: str = "anneal",
+            placement: str = "anneal", pipeline: str = "modulo",
             cache: Union[bool, str, Path, CompileCache, None] = None,
             shard_batch: Optional[bool] = None,
             **overrides) -> Simulation:
@@ -277,6 +277,10 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     (default, the communication-aware annealer — ships the better of the
     annealed and identity geometries) or ``"identity"`` (the frozen
     process-p-on-core-p order); see ``core.place``.
+    ``pipeline`` controls cross-Vcycle modulo pipelining: ``"modulo"``
+    (default — best-of-two, the pipelined schedule ships only when its
+    steady-state II beats the unpipelined VCPL) or ``"off"`` (the frozen
+    barrier-per-Vcycle path); see ``core.schedule.pipeline_schedule``.
     """
     bench, circuit = _resolve_source(source, scale, seeds, overrides)
     if bench is not None:
@@ -289,13 +293,13 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
     if cc is not None:
         key = cache_key(circuit, hw, strategy=strategy, use_luts=use_luts,
                         optimize=optimize, sched_strategy=sched_strategy,
-                        placement=placement)
+                        placement=placement, pipeline=pipeline)
         prog = cc.load(key)
     if prog is None:
         prog = compile_circuit(circuit, hw, strategy=strategy,
                                use_luts=use_luts, optimize=optimize,
                                sched_strategy=sched_strategy,
-                               placement=placement)
+                               placement=placement, pipeline=pipeline)
         prog.stats["cache_hit"] = False
         if cc is not None:
             cc.store(key, prog)

@@ -35,6 +35,7 @@ def _assert_bit_exact(orig, loaded):
     assert loaded.t_compute == orig.t_compute
     assert loaded.vcpl == orig.vcpl
     assert loaded.used_cores == orig.used_cores
+    assert loaded.pipe_prologue == orig.pipe_prologue
     assert loaded.outputs == orig.outputs
     assert loaded.state_regs == orig.state_regs
     assert loaded.stats == orig.stats

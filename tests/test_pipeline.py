@@ -1,0 +1,180 @@
+"""Cross-Vcycle pipelined execution: rotated prologue dispatch end to end.
+
+Full-scale bc on the 5x5 grid ships a modulo-pipelined schedule with a
+non-empty retimed prologue (``Program.pipe_prologue > 0``), which makes it
+the vehicle for everything the engines must get right under pipelining:
+
+  * rotated dispatch (body -> exchange -> gated prologue) stays bit-exact
+    against the netlist oracle and the full-stream seed engine;
+  * a mid-chunk exception must freeze the machine *without* committing the
+    next iteration's in-flight prologue (the gated tail);
+  * batched and sharded engines apply the iteration-0 prologue once and
+    gate the tail per element;
+  * the ``pipeline`` knob is a compile-cache key dimension, and artifacts
+    round-trip the prologue length.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+import repro.sim as sim
+from repro.circuits import FINISH, build
+from repro.core.bsp import BatchedMachine, Machine, ShardedBatchedMachine
+from repro.core.compile import compile_circuit
+from repro.core.interpreter import NetlistSim
+from repro.core.isa import HardwareConfig
+from repro.core.isasim import IsaSim
+from repro.sim.cache import cache_key
+
+HW = HardwareConfig(grid_width=5, grid_height=5)
+SEEDS = [3, 11, 42]
+
+
+@pytest.fixture(scope="module")
+def bc_full():
+    """Full-scale bc: the circuit whose shipped 5x5 schedule carries a
+    retimed prologue (P > 0) — asserted so coverage cannot silently rot."""
+    b = build("bc", "full")
+    prog = compile_circuit(b.circuit, HW, check=True)
+    assert prog.pipe_prologue > 0, \
+        "bc/full no longer ships a retimed prologue — pick a new vehicle"
+    assert prog.stats["pipeline_pick"] == "modulo"
+    assert prog.vcpl < prog.stats["vcpl_unpipelined"]
+    ref = NetlistSim(b.circuit)
+    ref.run(b.n_cycles + 10)
+    return b, prog, ref
+
+
+@pytest.fixture(scope="module")
+def bc_batch():
+    b = build("bc", "full", seeds=SEEDS)
+    prog = compile_circuit(b.circuit, HW)
+    assert prog.pipe_prologue > 0
+    return b, prog
+
+
+def test_rotated_dispatch_matches_oracle(bc_full):
+    """jnp engine and numpy ISA sim (both rotated) vs the netlist oracle:
+    same finish cycle, same exceptions, identical architectural state —
+    and identical raw register planes to each other (same convention)."""
+    b, prog, ref = bc_full
+    m = Machine(prog)
+    st = m.run(m.init_state(), b.n_cycles + 10)
+    s = IsaSim(prog)
+    assert s.run(b.n_cycles + 10) == b.n_cycles
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+    assert m.exceptions(st) == s.exceptions()
+    for rname in prog.state_regs:
+        assert m.read_reg(st, rname) == ref.reg_value(rname), rname
+        assert s.read_reg(rname) == ref.reg_value(rname), rname
+    np.testing.assert_array_equal(np.asarray(st.regs)[:s.C], s.regs)
+
+
+def test_seed_engine_agrees_at_frozen_end(bc_full):
+    """The unspecialized seed engine executes the combined stream head
+    first (full-stream convention); after the raising Vcycle both
+    conventions hold the same committed state, so the frozen end states
+    coincide bit for bit."""
+    b, prog, _ref = bc_full
+    m_rot = Machine(prog)
+    m_full = Machine(prog, specialize=False)
+    st_r = m_rot.run(m_rot.init_state(), b.n_cycles + 10)
+    st_f = m_full.run(m_full.init_state(), b.n_cycles + 10)
+    assert m_rot.exceptions(st_r) == m_full.exceptions(st_f)
+    np.testing.assert_array_equal(np.asarray(st_r.regs),
+                                  np.asarray(st_f.regs))
+    np.testing.assert_array_equal(np.asarray(st_r.flags),
+                                  np.asarray(st_f.flags))
+
+
+@pytest.mark.parametrize("backend,chunk", [("jnp", 8), ("jnp", 32),
+                                           ("pallas", 8)])
+def test_midchunk_freeze_discards_inflight_prologue(backend, chunk, bc_full):
+    """bc raises FINISH mid-chunk. By then the raising iteration's gated
+    prologue tail — cycle k+1's carries — is in flight; the freeze must
+    not commit it. The rotated numpy sim implements the same gate
+    independently, so the full frozen register planes must coincide."""
+    b, prog, ref = bc_full
+    if backend == "pallas" and prog.has_global:
+        pytest.skip("privileged off-chip programs use the jnp engine")
+    assert b.n_cycles % chunk != 0
+    m = Machine(prog, backend=backend, chunk=chunk,
+                interpret=(backend == "pallas"))
+    st = m.run(m.init_state(), 1000)       # budget far past the exception
+    assert m.perf(st)["vcycles"] == b.n_cycles
+    assert set(m.exceptions(st).values()) == {FINISH}
+    s = IsaSim(prog)
+    s.run(b.n_cycles + 10)
+    np.testing.assert_array_equal(np.asarray(st.regs)[:s.C], s.regs)
+    for rname in prog.state_regs:
+        assert m.read_reg(st, rname) == ref.reg_value(rname), rname
+
+
+def test_batched_pipelined_matches_single(bc_batch):
+    """BatchedMachine under a P > 0 program: the iteration-0 prologue is
+    applied per element at init, the tail gated per element; every batch
+    element bit-exact against an independent single-stimulus rotated run."""
+    b, prog = bc_batch
+    images = b.images(prog)
+    bm = BatchedMachine(prog, images=images)
+    st = bm.run(bm.init_state(), b.n_cycles + 10)
+    for i in range(len(SEEDS)):
+        m = Machine(prog)
+        s1 = m.run(m.init_state(images=images[i]), b.n_cycles + 10)
+        assert set(bm.exceptions(st, i).values()) == {FINISH}
+        assert bm.exceptions(st, i) == m.exceptions(s1)
+        np.testing.assert_array_equal(np.asarray(st.regs[i]),
+                                      np.asarray(s1.regs))
+        np.testing.assert_array_equal(np.asarray(st.flags[i]),
+                                      np.asarray(s1.flags))
+
+
+def test_sharded_pipelined_matches_batched(bc_batch):
+    """The mesh-sharded engine (degenerate D=1 mesh on the test runner,
+    real mesh on the 8-device CI job) reproduces the vmapped engine under
+    a P > 0 program — prologue-applied init images shard correctly."""
+    import jax
+    b, prog = bc_batch
+    sm = ShardedBatchedMachine(prog, images=b.images_batch(prog))
+    bm = BatchedMachine(prog, images=b.images(prog))
+    st = sm.run(sm.init_state(), b.n_cycles + 10)
+    sb = bm.run(bm.init_state(), b.n_cycles + 10)
+    for ls, lb in zip(st, sb):
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lb))
+
+
+def test_pipeline_knob_in_cache_key(bc_full):
+    """pipeline= is a cache-key dimension: off/modulo requests never alias,
+    and a facade round-trip through one cache dir keeps both artifacts."""
+    b, _prog, _ref = bc_full
+    k_mod = cache_key(b.circuit, HW, pipeline="modulo")
+    k_off = cache_key(b.circuit, HW, pipeline="off")
+    assert k_mod != k_off
+    assert k_mod == cache_key(b.circuit, HW)      # modulo is the default
+    with tempfile.TemporaryDirectory(prefix="repro-pipe-cache-") as td:
+        s_off = sim.compile(b, HW, pipeline="off", cache=td)
+        s_mod = sim.compile(b, HW, cache=td)
+        assert not s_off.cache_hit and not s_mod.cache_hit   # no aliasing
+        assert s_off.program.pipe_prologue == 0
+        assert s_mod.program.pipe_prologue > 0
+        again = sim.compile(b, HW, cache=td)
+        assert again.cache_hit
+        assert again.program.pipe_prologue == s_mod.program.pipe_prologue
+        assert again.program.vcpl == s_mod.program.vcpl
+
+
+def test_artifact_roundtrip_preserves_prologue(bc_full, tmp_path):
+    """save/load keeps pipe_prologue, and the loaded Program's rotated
+    IsaSim run equals the original's."""
+    b, prog, _ref = bc_full
+    p = tmp_path / "bc_pipe.npz"
+    prog.save(p)
+    loaded = sim.load(p).program
+    assert loaded.pipe_prologue == prog.pipe_prologue
+    assert loaded.vcpl == prog.vcpl
+    s0, s1 = IsaSim(prog), IsaSim(loaded)
+    assert s0.run(b.n_cycles + 10) == s1.run(b.n_cycles + 10)
+    np.testing.assert_array_equal(s0.regs, s1.regs)
+    assert s0.exceptions() == s1.exceptions()

@@ -13,8 +13,8 @@ import pytest
 from repro.circuits import CIRCUITS, build
 from repro.core.compile import compile_circuit
 from repro.core.isa import HardwareConfig, Instr, Op
-from repro.core.schedule import (STRATEGIES, schedule, validate_schedule,
-                                 _route)
+from repro.core.schedule import (PipelineInfo, STRATEGIES, pipeline_schedule,
+                                 schedule, validate_schedule, _route)
 
 HW = HardwareConfig(grid_width=5, grid_height=5)
 
@@ -100,6 +100,109 @@ def test_self_send_claims_no_noc(strat):
 
 
 # ----------------------------------------------------------------------
+# cross-Vcycle modulo pipelining: validator rejections + II invariants
+# ----------------------------------------------------------------------
+
+def test_cross_iteration_raw_violation_rejected():
+    """A reader of a current register placed before its commit MOV demands
+    ii >= sigma - reader_slot; an II below that floor must be rejected."""
+    hw = HardwareConfig(grid_width=2, grid_height=2)
+    rd = Instr(Op.ADD, dst=3, srcs=(2,))       # reads cur vreg 2 at the head
+    tmp = Instr(Op.ADD, dst=1, srcs=())
+    cm = Instr(Op.MOV, dst=2, srcs=(1,))       # commit MOV for cur vreg 2
+    core_instrs = [[rd, tmp, cm]]
+    war = [[(0, 2)]]                           # read-before-overwrite
+    res = schedule(core_instrs, [0], hw, {}, war, [[]], strategy="slack")
+    validate_schedule(res, core_instrs, [0], hw, {}, war, [[]])
+    # sigma(vreg 2) = commit slot + raw_latency; the head reader at slot 0
+    # forces ii >= sigma, which exceeds every legal ii < span here
+    info = PipelineInfo(ii=res.vcpl - 1, prologue_len=0, span=res.vcpl,
+                        hoist=[set()], share=[{}], commit_def=[{2: 2}],
+                        replay_rank={})
+    with pytest.raises(ValueError, match="data-hazard floor"):
+        validate_schedule(res, core_instrs, [0], hw, {}, war, [[]],
+                          pipeline=info)
+
+
+def test_modulo_link_collision_rejected():
+    """Two SENDs sharing a NoC link whose claim slots coincide modulo the
+    II must be rejected — steady state replays the claims every ii slots.
+    The schedule is hand-built so the shared (1 -> 2) link carries claims
+    exactly ii apart: legal as a single Vcycle, a collision in overlap."""
+    from repro.core.schedule import CoreProgram, ScheduleResult
+    hw = HardwareConfig(grid_width=3, grid_height=1)
+    a0 = Instr(Op.ADD, dst=1, srcs=())
+    s0 = Instr(Op.SEND, dst=2, srcs=(1,))    # core 0 -> 2: links (0,1),(1,2)
+    s1 = Instr(Op.SEND, dst=4, srcs=(9,))    # core 1 -> 2: link (1,2)
+    core_instrs = [[a0, s0], [s1]]
+    send_dst = {id(s0): 2, id(s1): 2}
+    t_comp = 7
+    res = ScheduleResult(
+        cores=[
+            CoreProgram([a0, None, None, None, s0, None, None],
+                        0, [(4, s0)]),
+            CoreProgram([None, None, s1, None, None, None, None],
+                        0, [(2, s1)]),
+            CoreProgram([None] * t_comp, 2, []),
+        ],
+        t_compute=t_comp, vcpl=t_comp + 2)
+    validate_schedule(res, core_instrs, [0, 1], hw, send_dst,
+                      [[], []], [[], []])
+    # (1,2)-link claims: s0 at 4+1+send_latency = 6, s1 at 2+1 = 3 —
+    # collision-free per Vcycle, identical residues modulo ii = 3
+    info = PipelineInfo(ii=3, prologue_len=0, span=res.vcpl,
+                        hoist=[set(), set()], share=[{}, {}],
+                        commit_def=[{}, {}], replay_rank=None)
+    info.replay_rank = _derive_ranks(res, core_instrs, [0, 1], hw,
+                                     send_dst, info)
+    with pytest.raises(ValueError, match=r"link .* collide modulo"):
+        validate_schedule(res, core_instrs, [0, 1], hw, send_dst,
+                          [[], []], [[], []], pipeline=info)
+
+
+def _derive_ranks(res, core_instrs, core_of_proc, hw, send_dst, info):
+    """Replay ranks exactly as the pipeliner assigns them (validator mode
+    needs them recorded up front)."""
+    from repro.core.schedule import _commit_sigma
+    placed = [{id(ins): s for s, ins in enumerate(cp.slots)
+               if ins is not None} for cp in res.cores]
+    slot_of = [[placed[core_of_proc[p]][id(ins)] for ins in instrs]
+               for p, instrs in enumerate(core_instrs)]
+    _sigma, ranks = _commit_sigma(core_instrs, core_of_proc, hw, send_dst,
+                                  info.commit_def, slot_of, res.t_compute)
+    return ranks
+
+
+@pytest.mark.parametrize("name", sorted(CIRCUITS))
+def test_shipped_ii_never_exceeds_vcpl(programs, name):
+    """Best-of-two ship rule: the shipped machine-cycles-per-Vcycle is the
+    II when pipelining won and the barrier VCPL otherwise — never worse."""
+    for strat in STRATEGIES:
+        prog = programs[name, strat]
+        st = prog.stats
+        assert st["vcpl_ii"] == prog.vcpl
+        assert st["vcpl_ii"] <= st["vcpl_unpipelined"]
+        if st["pipeline_pick"] == "modulo":
+            assert st["vcpl_ii"] < st["vcpl_unpipelined"]
+        else:
+            assert st["vcpl_ii"] == st["vcpl_unpipelined"]
+            assert prog.pipe_prologue == 0
+
+
+def test_pipeline_off_knob_is_frozen_path():
+    """pipeline="off" must not even account for pipelining: the stats pin
+    the unpipelined VCPL and the schedule still validates (check=True)."""
+    c = build("bc").circuit
+    off = compile_circuit(c, HW, pipeline="off", check=True)
+    assert off.stats["pipeline"] == "off"
+    assert off.stats["pipeline_pick"] == "off"
+    assert off.stats["vcpl_ii"] == off.stats["vcpl_unpipelined"] == off.vcpl
+    assert off.pipe_prologue == 0
+    with pytest.raises(ValueError, match="unknown pipeline mode"):
+        compile_circuit(c, HW, pipeline="bogus")
+
+
+# ----------------------------------------------------------------------
 # random dependence graphs: both strategies produce valid schedules
 # ----------------------------------------------------------------------
 
@@ -151,6 +254,22 @@ def _check_random(seed: int) -> None:
                           send_dst_core, war_edges, order_edges)
         assert res.t_compute >= res.stats["crit_path_lb"]
         vcpls[strat] = res.vcpl
+        # the modulo pipeliner on the same problem: when it finds an
+        # overlay at all, its II is strictly below the barrier VCPL and
+        # the combined schedule passes the full pipelined validator
+        r = pipeline_schedule(
+            core_instrs, core_of_proc, hw, send_dst_core, war_edges,
+            order_edges, [dict() for _ in core_instrs],
+            [dict() for _ in core_instrs], [set() for _ in core_instrs],
+            strategy=strat, crit_path_lb=res.stats["crit_path_lb"],
+            base=res)
+        if r is not None:
+            comb, info = r
+            assert 1 <= info.ii < res.vcpl
+            assert info.ii < comb.vcpl == info.span
+            validate_schedule(comb, core_instrs, core_of_proc, hw,
+                              send_dst_core, war_edges, order_edges,
+                              pipeline=info)
     # both strategies schedule the same instruction set; neither may
     # blow past the trivial serial bound
     serial = sum(len(ci) for ci in core_instrs)
