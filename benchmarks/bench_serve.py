@@ -1,0 +1,192 @@
+"""Serving throughput: coalesced dynamic batching vs sequential B=1.
+
+The PR 9 headline: a long-lived daemon (``repro.serve``) that keeps hot
+compiled Simulations resident and coalesces concurrent same-fingerprint
+requests into one batched launch should beat the same daemon forced to
+``max_batch=1`` (one launch per request — the "no dynamic batching"
+deployment) on aggregate requests/sec at batch-64-scale concurrency.
+
+Traffic is *mixed*: N requests per circuit for two circuits (mc + bc —
+structure-seed-invariant builders, so per-request results are provably
+bit-exact against independent ``sim.compile(name, seeds=[s]).run()``
+runs, which this bench spot-checks and records). Each mode gets an
+unmeasured warmup wave at the same concurrency (compiles through the
+shared on-disk cache + XLA traces are one-time serving costs), then a
+measured wave on fresh seeds (per-seed init-plane building and host →
+device image stacking stay inside the measured region — they are real
+per-request serving work).
+
+Emits ``results/bench/BENCH_serve.json`` and a root-level copy
+(``BENCH_serve.json``): one row per mode (rps, p50/p95 latency, observed
+batch sizes) plus a summary row with the rps speedup. Exits non-zero if
+coalescing does not beat B=1 or any sampled result is not bit-exact.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve           # N=64/circuit
+  PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # N=8, CI
+"""
+from __future__ import annotations
+
+import asyncio
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import repro.sim as sim
+from benchmarks.common import emit, row_csv
+from repro.core import HardwareConfig
+from repro.serve import (BatchPolicy, SessionManager, SimRequest,
+                         SimServer)
+
+HWD = {"grid_width": 5, "grid_height": 5}
+HW = HardwareConfig(**HWD)
+NAMES = ["mc", "bc"]
+SCALE = "small"
+N_PER_CIRCUIT = 64
+N_SMOKE = 8
+MAX_WAIT_S = 0.03
+EXACT_SAMPLES = 3          # per circuit, vs individual compile+run
+
+
+def _policy(mode: str) -> BatchPolicy:
+    if mode == "coalesced":
+        return BatchPolicy(max_batch=64, max_wait_s=MAX_WAIT_S,
+                           max_queue=4096)
+    return BatchPolicy(max_batch=1, max_wait_s=0.0, max_queue=4096)
+
+
+def _reqs(names: List[str], scale: str, n: int, seed0: int
+          ) -> List[SimRequest]:
+    """n requests per circuit, interleaved — the mixed-traffic shape."""
+    return [SimRequest(nm, scale=scale, seed=seed0 + i, hw=HWD)
+            for i in range(n) for nm in names]
+
+
+async def _wave(server: SimServer, reqs: List[SimRequest]):
+    """Fire every request concurrently; per-request latency + wall time."""
+    lat: Dict[str, float] = {}
+
+    async def one(r: SimRequest):
+        t0 = time.perf_counter()
+        resp = await server.submit(r)
+        lat[r.rid] = time.perf_counter() - t0
+        return resp
+
+    t0 = time.perf_counter()
+    resps = await asyncio.gather(*(one(r) for r in reqs))
+    wall = time.perf_counter() - t0
+    return resps, wall, [lat[r.rid] for r in reqs]
+
+
+async def _bench_mode(mode: str, names: List[str], scale: str, n: int,
+                      cache_dir: str) -> dict:
+    server = SimServer(
+        sessions=SessionManager(cache=cache_dir, max_sessions=8),
+        policy=_policy(mode))
+    try:
+        # warmup wave: compiles (warm via the shared cache after the first
+        # mode) and the XLA trace for this mode's steady-state batch shape
+        warm, _, _ = await _wave(server, _reqs(names, scale, n, 10_000))
+        bad = [r for r in warm if not r.ok]
+        if bad:
+            raise RuntimeError(f"warmup failed: {bad[0].error}")
+        stats0 = dict(server.batcher.stats)
+
+        resps, wall, lats = await _wave(server, _reqs(names, scale, n, 1))
+        bad = [r for r in resps if not (r.ok and r.result.finished)]
+        if bad:
+            raise RuntimeError(
+                f"{len(bad)} requests failed in measured wave "
+                f"(first: {bad[0].status} {bad[0].error})")
+
+        stats = server.batcher.stats
+        launches = stats["launches"] - stats0["launches"]
+        launched = stats["launched_requests"] - stats0["launched_requests"]
+        row = {
+            "mode": mode,
+            "scale": scale,
+            "circuits": list(names),
+            "n_requests": len(resps),
+            "wall_s": wall,
+            "rps": len(resps) / wall,
+            "p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p95_ms": float(np.percentile(lats, 95) * 1e3),
+            "launches": launches,
+            "mean_batch": launched / max(launches, 1),
+            "max_seen_batch": stats["max_seen_batch"],
+            "mean_run_s": float(np.mean([r.run_s for r in resps])),
+            "engine_kinds": sorted({r.engine_kind for r in resps}),
+            "sessions_resident": len(server.sessions.resident()),
+        }
+        # spot-check bit-exactness of served results against independent
+        # single-stimulus compiles of the same (circuit, seed)
+        exact = True
+        checked = 0
+        for q, r in zip(_reqs(names, scale, n, 1), resps):
+            if q.seed - 1 >= EXACT_SAMPLES:
+                continue
+            ref = sim.compile(q.circuit, HW, scale=scale, seeds=[q.seed],
+                              cache=cache_dir).run()
+            exact = exact and ref.finished and (
+                r.result.cycles == ref.cycles
+                and r.result.registers == ref.registers
+                and r.result.outputs == ref.outputs
+                and r.result.exceptions == ref.exceptions)
+            checked += 1
+        row["bit_exact_samples"] = checked
+        row["bit_exact_vs_individual"] = bool(exact)
+        return row
+    finally:
+        await server.close()
+
+
+async def _run_async(names: List[str], scale: str, n: int,
+                     cache_dir: str) -> List[dict]:
+    rows = []
+    for mode in ("coalesced", "b1"):
+        row = await _bench_mode(mode, names, scale, n, cache_dir)
+        row_csv(f"serve/{mode}", 1e6 / row["rps"],
+                f"p95={row['p95_ms']:.0f}ms_meanB={row['mean_batch']:.1f}")
+        rows.append(row)
+    coal, b1 = rows[0], rows[1]
+    rows.append({
+        "mode": "summary",
+        "scale": scale,
+        "n_requests": coal["n_requests"],
+        "speedup_rps": coal["rps"] / b1["rps"],
+        "p50_ratio": coal["p50_ms"] / b1["p50_ms"],
+        "p95_ratio": coal["p95_ms"] / b1["p95_ms"],
+    })
+    return rows
+
+
+def run(names=None, smoke: bool = False) -> None:
+    names = names or NAMES
+    n = N_SMOKE if smoke else N_PER_CIRCUIT
+    # a private compile cache shared by both modes: the coalesced mode's
+    # warmup pays the cold compiles, b1 warm-starts from disk — neither
+    # measured wave ever compiles
+    with tempfile.TemporaryDirectory(prefix="bench_serve_cache_") as cd:
+        rows = asyncio.run(_run_async(list(names), SCALE, n, cd))
+    emit("BENCH_serve" + ("_smoke" if smoke else ""), rows,
+         root=not smoke)
+    summary = rows[-1]
+    coal = rows[0]
+    print(f"# serve: coalesced {coal['rps']:.1f} rps "
+          f"(mean batch {coal['mean_batch']:.1f}) vs b1 "
+          f"{rows[1]['rps']:.1f} rps -> "
+          f"{summary['speedup_rps']:.2f}x aggregate rps")
+    if summary["speedup_rps"] <= 1.0:
+        raise SystemExit("bench_serve: coalescing did not beat the B=1 "
+                         f"baseline ({summary['speedup_rps']:.2f}x)")
+    if not all(r.get("bit_exact_vs_individual", True) for r in rows):
+        raise SystemExit("bench_serve: served results diverged from "
+                         "individual compile+run references")
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    names = [a for a in argv if not a.startswith("-")] or None
+    run(names, smoke="--smoke" in argv)

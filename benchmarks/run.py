@@ -15,6 +15,7 @@ MODULES = [
     "bench_engine",       # engine Vcycles/sec trajectory (jnp/pallas/isasim)
     "bench_batch",        # batched-stimulus aggregate Vcycles/sec vs B
     "bench_compile",      # middle-end payoff: instrs/VCPL/throughput opt vs off
+    "bench_serve",        # serving: coalesced dynamic batching vs B=1 daemon
     "table3_perf",        # Table 3: main performance comparison
     "fig7_scaling",       # Fig 7:  VCPL multicore scaling
     "fig8_global_stall",  # Fig 8:  FIFO/RAM global-stall microbenchmarks

@@ -855,6 +855,24 @@ class BatchedMachine(Machine):
         # Machine; the pallas backend swaps in the batched chunk kernel below
         super().__init__(program, backend="jnp", compact=compact,
                          specialize=True, chunk=chunk)
+        self._set_images(images, batch)
+        B = self.B
+        self.backend = backend
+        # B=1 pays the plain specialized graph, not a vmap wrapper around it
+        self._plain = backend != "pallas" and B == 1
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            self._run_chunk = jax.jit(kops.make_vcycle_chunk(
+                program, self.C, self.chunk, interpret=interpret, batch=B))
+        elif self._plain:
+            self._run_chunk = jax.jit(self._b1chunk_impl)
+        else:
+            self._run_chunk = jax.jit(self._bchunk_impl)
+
+    # ------------------------------------------------------------------
+    def _set_images(self, images, batch: Optional[int]) -> None:
+        """Load the per-stimulus init images into the batched ``[B, ...]``
+        layout (sets ``breg0``/``bspad0``/``bgmem0`` and ``B``)."""
         C, R = self.C, self.R
         if images is None:
             assert batch is not None and batch >= 1, \
@@ -888,19 +906,27 @@ class BatchedMachine(Machine):
             # iteration 0's prologue, once per stimulus (pure — regs only)
             self.breg0 = jax.vmap(self._apply_prologue)(
                 self.breg0, self.bspad0, self.bgmem0)
-        self.backend = backend
-        # B=1 pays the plain specialized graph, not a vmap wrapper around it
-        self._plain = backend != "pallas" and B == 1
-        if backend == "pallas":
-            from ..kernels import ops as kops
-            self._run_chunk = jax.jit(kops.make_vcycle_chunk(
-                program, self.C, self.chunk, interpret=interpret, batch=B))
-        elif self._plain:
-            self._run_chunk = jax.jit(self._b1chunk_impl)
-        else:
-            self._run_chunk = jax.jit(self._bchunk_impl)
 
-    # ------------------------------------------------------------------
+    def rebind_images(self, images) -> None:
+        """Swap in a new batch of per-stimulus init images *in place*.
+
+        The batch size must match — the jitted chunk dispatch is
+        shape-specialized on B — so only the initial state changes and the
+        traced Vcycle graph stays hot. ``init_state()`` after a rebind
+        starts the new stimuli. This is what keeps a serving daemon's
+        compiled Simulations device-resident: per-batch image turnover
+        costs one host→device transfer, never a retrace.
+        """
+        if images is None:
+            raise ValueError("rebind_images needs init images")
+        B = (int(np.asarray(images[0]).shape[0]) if _is_stacked(images)
+             else len(images))
+        if B != self.B:
+            raise ValueError(
+                f"rebind_images: batch size changed {self.B} -> {B}; "
+                "build a new machine for a different B")
+        self._set_images(images, None)
+
     def init_state(self) -> MachineState:
         B = self.B
         return MachineState(
@@ -1027,13 +1053,7 @@ class ShardedBatchedMachine(BatchedMachine):
         B = self.B
         Bp = -(-B // D) * D
         self.Bp = Bp
-        if Bp > B:
-            def padb(a):
-                return jnp.concatenate(
-                    [a, jnp.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])], 0)
-            self.breg0 = padb(self.breg0)
-            self.bspad0 = padb(self.bspad0)
-            self.bgmem0 = padb(self.bgmem0)
+        self._pad_images()
         # padding elements start pre-frozen (see PAD_FROZEN_CYC)
         self._cyc0 = jnp.asarray(
             np.where(np.arange(Bp) < B, 0, PAD_FROZEN_CYC).astype(np.int32))
@@ -1065,6 +1085,23 @@ class ShardedBatchedMachine(BatchedMachine):
             lambda cyc, budget, carry: sharded(cyc, budget, *carry))
 
     # ------------------------------------------------------------------
+    def _pad_images(self) -> None:
+        """Pad the ``[B, ...]`` image arrays to ``[Bp, ...]`` with replicas
+        of stimulus 0 (padding elements never execute — ``_cyc0`` starts
+        them pre-frozen)."""
+        B, Bp = self.B, self.Bp
+        if Bp > B:
+            def padb(a):
+                return jnp.concatenate(
+                    [a, jnp.broadcast_to(a[:1], (Bp - B,) + a.shape[1:])], 0)
+            self.breg0 = padb(self.breg0)
+            self.bspad0 = padb(self.bspad0)
+            self.bgmem0 = padb(self.bgmem0)
+
+    def rebind_images(self, images) -> None:
+        super().rebind_images(images)      # checks the logical B matches
+        self._pad_images()
+
     def init_state(self) -> MachineState:
         """Initial state in the sharded ``[Bp, ...]`` layout: every leaf
         is placed batch-sharded over the mesh up front, so the first chunk

@@ -1,0 +1,39 @@
+"""Simulation-as-a-service: a long-lived daemon with dynamic batching.
+
+Four cooperating layers turn the one-shot ``repro.sim`` facade into a
+serving system (the ROADMAP's "millions of users" item — the inference-
+server shape applied to RTL simulation):
+
+* :mod:`~repro.serve.protocol` — :class:`SimRequest`/:class:`SimResponse`
+  dataclasses plus their newline-delimited-JSON wire form;
+* :mod:`~repro.serve.batcher` — per-fingerprint queues with a
+  max-batch/max-wait admission policy, deadline timeouts and
+  queue-depth backpressure;
+* :mod:`~repro.serve.sessions` — an LRU of hot compiled ``Simulation``s
+  keyed by ``Circuit.fingerprint()`` + hardware + compiler knobs,
+  warm-started through the on-disk compile cache;
+* :mod:`~repro.serve.daemon` — :class:`SimServer`, coalescing concurrent
+  same-fingerprint requests into one batched (or mesh-sharded, when
+  ``B >= 2*D``) launch and demuxing per-request results; in-process
+  ``await server.submit(req)`` and a TCP front-end
+  (``python -m repro.serve``).
+
+See ``docs/serving.md`` for the architecture and tuning guide, and
+``benchmarks/bench_serve.py`` for the load benchmark (coalesced dynamic
+batching vs sequential B=1).
+"""
+from .batcher import BatchPolicy, Batcher, Pending, Rejected
+from .daemon import SimServer
+from .protocol import (ERROR, OK, REJECTED, TIMEOUT, SimRequest,
+                       SimResponse, decode_request, decode_response,
+                       encode_request, encode_response)
+from .sessions import (CANONICAL_SEED, Session, SessionKey,
+                       SessionManager)
+
+__all__ = [
+    "BatchPolicy", "Batcher", "Pending", "Rejected", "SimServer",
+    "SimRequest", "SimResponse", "OK", "REJECTED", "TIMEOUT", "ERROR",
+    "encode_request", "decode_request", "encode_response",
+    "decode_response", "CANONICAL_SEED", "Session", "SessionKey",
+    "SessionManager",
+]

@@ -1,0 +1,99 @@
+"""Run the simulation daemon.
+
+TCP service (newline-delimited JSON; see ``repro.serve.protocol``)::
+
+  PYTHONPATH=src python -m repro.serve --host 127.0.0.1 --port 8421
+
+In-process self-test (submits a few mixed requests and exits non-zero on
+any failure — a deployment smoke check, no sockets needed)::
+
+  PYTHONPATH=src python -m repro.serve --self-test --scale small
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import sys
+
+from .batcher import BatchPolicy
+from .daemon import SimServer
+from .protocol import SimRequest
+from .sessions import SessionManager
+
+
+def _args() -> argparse.Namespace:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="Manticore simulation-as-a-service daemon")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8421)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--max-sessions", type=int, default=8)
+    ap.add_argument("--cache-dir", default=None,
+                    help="compile-cache directory (default: REPRO_SIM_CACHE"
+                         " or ~/.cache/repro-sim)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the on-disk compile cache")
+    ap.add_argument("--self-test", action="store_true",
+                    help="serve a few in-process requests and exit")
+    ap.add_argument("--circuits", default="mc,bc",
+                    help="self-test circuits (comma-separated)")
+    ap.add_argument("--scale", default="small",
+                    help="self-test scale")
+    return ap.parse_args()
+
+
+def _server(args: argparse.Namespace) -> SimServer:
+    cache = False if args.no_cache else (args.cache_dir or True)
+    return SimServer(
+        sessions=SessionManager(cache=cache,
+                                max_sessions=args.max_sessions),
+        policy=BatchPolicy(max_batch=args.max_batch,
+                           max_wait_s=args.max_wait_ms / 1e3,
+                           max_queue=args.max_queue))
+
+
+async def _self_test(server: SimServer, circuits, scale: str) -> int:
+    reqs = [SimRequest(name, scale=scale, seed=100 + i)
+            for name in circuits for i in range(4)]
+    resps = await asyncio.gather(*(server.submit(r) for r in reqs))
+    bad = [r for r in resps if not (r.ok and r.result.finished)]
+    for r in resps:
+        print(f"  {r.rid}: {r.status} batch={r.batch} "
+              f"engine={r.engine_kind} wait={r.wait_s * 1e3:.1f}ms")
+    if bad:
+        print(f"self-test FAILED: {len(bad)}/{len(resps)} requests bad")
+        return 1
+    print(f"self-test ok: {len(resps)} requests, "
+          f"{server.batcher.stats['launches']} launches")
+    return 0
+
+
+async def _main() -> int:
+    args = _args()
+    server = _server(args)
+    if args.self_test:
+        try:
+            return await _self_test(
+                server, [c for c in args.circuits.split(",") if c],
+                args.scale)
+        finally:
+            await server.close()
+    tcp = await server.serve_tcp(args.host, args.port)
+    addr = tcp.sockets[0].getsockname()
+    print(f"repro.serve listening on {addr[0]}:{addr[1]} "
+          f"(max_batch={args.max_batch}, "
+          f"max_wait={args.max_wait_ms:.0f}ms)")
+    try:
+        await tcp.serve_forever()
+    except (KeyboardInterrupt, asyncio.CancelledError):
+        pass
+    finally:
+        await server.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(asyncio.run(_main()))

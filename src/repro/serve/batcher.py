@@ -1,0 +1,155 @@
+"""Fingerprint-keyed dynamic batching: many requests, one launch.
+
+The inference-server shape (continuous/dynamic batching) applied to RTL
+simulation: requests land on per-key queues — one key per ``(session,
+cycle budget)``, i.e. per compiled Program that could execute them in one
+batched launch — and a drain task per key assembles batches under a
+**max-batch / max-wait admission policy**:
+
+* the first request of a batch opens a window of ``max_wait_s``;
+* the batch launches as soon as ``max_batch`` riders arrived, or when the
+  window closes, whichever is first (``max_wait_s`` bounds the latency
+  cost of coalescing; ``max_batch`` bounds device memory);
+* a queue deeper than ``max_queue`` refuses admission
+  (:class:`Rejected` → the daemon answers ``REJECTED``: explicit
+  backpressure beats unbounded queueing);
+* each request may carry a deadline; requests whose deadline passed by
+  launch time are answered ``TIMEOUT`` and never occupy a batch slot.
+
+``max_batch=1`` degenerates to sequential per-request launches — the
+baseline :mod:`benchmarks.bench_serve` measures coalescing against.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Any, Awaitable, Callable, Dict, Hashable, List, Optional
+
+from .protocol import SimRequest
+
+
+@dataclass
+class BatchPolicy:
+    """Admission policy knobs (see module docstring and docs/serving.md)."""
+    max_batch: int = 64       # riders per coalesced launch
+    max_wait_s: float = 0.02  # window the first rider holds open
+    max_queue: int = 256      # per-key depth before admission refuses
+
+
+class Rejected(Exception):
+    """Admission refused: the key's queue is at ``max_queue``."""
+
+
+@dataclass
+class Pending:
+    """One enqueued request: the future the submitter awaits plus the
+    timing/admission metadata the drain loop needs."""
+    req: SimRequest
+    future: "asyncio.Future[Any]"
+    session: Any = None
+    enqueued: float = field(default_factory=time.monotonic)
+    deadline: Optional[float] = None    # monotonic; None = wait forever
+
+    @property
+    def expired(self) -> bool:
+        return self.deadline is not None \
+            and time.monotonic() >= self.deadline
+
+
+LaunchFn = Callable[[Hashable, List[Pending]], Awaitable[None]]
+TimeoutFn = Callable[[Hashable, List[Pending]], None]
+
+
+class Batcher:
+    """Per-key queues + drain tasks feeding an async ``launch`` callable.
+
+    ``launch(key, batch)`` receives only live (non-expired) requests and
+    must resolve every ``Pending.future``; ``on_timeout(key, expired)``
+    (if given) resolves the requests dropped at admission time.
+    """
+
+    def __init__(self, policy: BatchPolicy, launch: LaunchFn,
+                 on_timeout: Optional[TimeoutFn] = None):
+        self.policy = policy
+        self._launch = launch
+        self._on_timeout = on_timeout
+        self._queues: Dict[Hashable, asyncio.Queue] = {}
+        self._tasks: Dict[Hashable, asyncio.Task] = {}
+        self.stats: Dict[str, int] = {
+            "submitted": 0, "rejected": 0, "timed_out": 0,
+            "launches": 0, "launched_requests": 0, "max_seen_batch": 0}
+
+    # ------------------------------------------------------------------
+    def submit(self, key: Hashable, pending: Pending) -> None:
+        """Admit ``pending`` onto ``key``'s queue (creating its drain
+        task on first use) or raise :class:`Rejected`."""
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = asyncio.Queue()
+            self._tasks[key] = asyncio.get_running_loop().create_task(
+                self._drain(key, q))
+        if q.qsize() >= self.policy.max_queue:
+            self.stats["rejected"] += 1
+            raise Rejected(
+                f"queue for {key!r} is full "
+                f"({self.policy.max_queue} pending)")
+        self.stats["submitted"] += 1
+        q.put_nowait(pending)
+
+    async def _drain(self, key: Hashable, q: asyncio.Queue) -> None:
+        pol = self.policy
+        while True:
+            batch: List[Pending] = [await q.get()]
+            window_ends = time.monotonic() + pol.max_wait_s
+            while len(batch) < pol.max_batch:
+                remaining = window_ends - time.monotonic()
+                if remaining <= 0:
+                    # window closed: take whatever already queued, no wait
+                    try:
+                        batch.append(q.get_nowait())
+                        continue
+                    except asyncio.QueueEmpty:
+                        break
+                try:
+                    batch.append(
+                        await asyncio.wait_for(q.get(), remaining))
+                except asyncio.TimeoutError:
+                    break
+            live = [p for p in batch if not p.expired]
+            dead = [p for p in batch if p.expired]
+            if dead:
+                self.stats["timed_out"] += len(dead)
+                if self._on_timeout is not None:
+                    self._on_timeout(key, dead)
+            if not live:
+                continue
+            self.stats["launches"] += 1
+            self.stats["launched_requests"] += len(live)
+            self.stats["max_seen_batch"] = max(
+                self.stats["max_seen_batch"], len(live))
+            try:
+                await self._launch(key, live)
+            except Exception as exc:       # launch() should not raise, but
+                for p in live:             # a rider must never hang on it
+                    if not p.future.done():
+                        p.future.set_exception(
+                            RuntimeError(f"launch failed: {exc!r}"))
+
+    # ------------------------------------------------------------------
+    def depth(self, key: Hashable) -> int:
+        q = self._queues.get(key)
+        return q.qsize() if q is not None else 0
+
+    async def close(self) -> None:
+        """Cancel every drain task (pending requests are abandoned — the
+        daemon drains before closing in an orderly shutdown)."""
+        for t in self._tasks.values():
+            t.cancel()
+        for t in self._tasks.values():
+            try:
+                await t
+            except (asyncio.CancelledError, Exception):
+                pass
+        self._tasks.clear()
+        self._queues.clear()

@@ -1,0 +1,191 @@
+"""The simulation daemon: hot Simulations + dynamic batching + front-ends.
+
+:class:`SimServer` wires the three lower layers together:
+
+* :mod:`repro.serve.sessions` keeps compiled ``Simulation``s resident
+  (LRU, warm-started through the on-disk compile cache);
+* :mod:`repro.serve.batcher` coalesces concurrent requests that share a
+  ``(session, cycle budget)`` key — i.e. one circuit fingerprint + hw +
+  knobs — into one batched launch;
+* :mod:`repro.serve.protocol` is the request/response shape, in-process
+  and over TCP (newline-delimited JSON).
+
+A coalesced launch builds the per-seed init planes (host-side netlist
+rebuild anchored on the canonical seed, memoized per seed), stacks them
+host-parallel (``Program.init_images_batch``), picks the engine through
+the facade's auto-selection (``Simulation.select_engine_kind``: B >= 2*D
+on a multi-device mesh → the sharded engine, otherwise the vmapped
+batched engine), runs it on a worker thread under the device lock, and
+demuxes the per-element :class:`~repro.sim.result.RunResult`\\ s back to
+their riders. Engines are cached per (kind, B) inside the session and
+rebound onto each batch's images, so steady-state traffic pays one
+host→device transfer per launch and zero retraces.
+
+In-process use::
+
+    server = SimServer(policy=BatchPolicy(max_batch=64, max_wait_s=0.02))
+    resp = await server.submit(SimRequest("mc", scale="small", seed=7))
+    assert resp.ok and resp.result.finished
+
+TCP use: ``python -m repro.serve --port 8421`` (see ``__main__.py``),
+clients write one request JSON per line and read one response per line
+(responses may interleave across a pipelined connection; match on
+``rid``).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from typing import Hashable, List, Optional, Tuple
+
+from .batcher import BatchPolicy, Batcher, Pending, Rejected
+from .protocol import (ERROR, OK, REJECTED, TIMEOUT, SimRequest,
+                       SimResponse, decode_request, encode_response)
+from .sessions import Session, SessionManager
+
+
+class SimServer:
+    """Long-lived serving daemon over the ``repro.sim`` facade."""
+
+    def __init__(self, *, sessions: Optional[SessionManager] = None,
+                 policy: Optional[BatchPolicy] = None, cache=True,
+                 image_workers: Optional[int] = None):
+        self.sessions = sessions if sessions is not None \
+            else SessionManager(cache=cache)
+        self.policy = policy if policy is not None else BatchPolicy()
+        self.batcher = Batcher(self.policy, self._launch, self._timeout)
+        self.image_workers = image_workers
+        # one launch on the device at a time: the engines are synchronous
+        # and the device is a shared resource; admission keeps queueing
+        # fair while a launch is in flight
+        self._device_lock = asyncio.Lock()
+        self._tcp_server: Optional[asyncio.base_events.Server] = None
+
+    # ------------------------------------------------------------------
+    # in-process front-end
+    # ------------------------------------------------------------------
+    async def submit(self, req: SimRequest) -> SimResponse:
+        """Serve one request end-to-end: resolve (or compile) its
+        session, enqueue it for coalescing, await its demuxed result."""
+        try:
+            session = await self.sessions.get(req)
+        except (KeyError, ValueError, TypeError) as exc:
+            return SimResponse(req.rid, ERROR, error=str(exc))
+        try:
+            cycles = int(req.cycles) if req.cycles is not None \
+                else session.default_cycles()
+        except ValueError as exc:
+            return SimResponse(req.rid, ERROR, error=str(exc),
+                               fingerprint=session.fingerprint)
+        pending = Pending(
+            req=req,
+            future=asyncio.get_running_loop().create_future(),
+            session=session,
+            deadline=(time.monotonic() + req.timeout
+                      if req.timeout is not None else None))
+        key: Tuple[Hashable, int] = (session.key, cycles)
+        try:
+            self.batcher.submit(key, pending)
+        except Rejected as exc:
+            return SimResponse(req.rid, REJECTED, error=str(exc),
+                               fingerprint=session.fingerprint)
+        return await pending.future
+
+    # ------------------------------------------------------------------
+    # batcher callbacks
+    # ------------------------------------------------------------------
+    def _timeout(self, key: Hashable, expired: List[Pending]) -> None:
+        for p in expired:
+            if not p.future.done():
+                p.future.set_result(SimResponse(
+                    p.req.rid, TIMEOUT,
+                    error="deadline passed before launch",
+                    fingerprint=p.session.fingerprint,
+                    wait_s=time.monotonic() - p.enqueued))
+
+    async def _launch(self, key: Hashable, batch: List[Pending]) -> None:
+        """Execute one coalesced batch and demux per-rider results."""
+        session: Session = batch[0].session
+        cycles: int = key[1]
+        seeds = [p.req.seed for p in batch]
+        try:
+            images = await asyncio.to_thread(
+                session.images_for, seeds, self.image_workers)
+            kind = session.sim.select_engine_kind(len(batch))
+            if kind == "machine":
+                kind = "batched"       # B=1 rides the no-vmap fast path
+            async with self._device_lock:
+                launched = time.monotonic()
+                engine = await asyncio.to_thread(
+                    session.engine_for, kind, images)
+                results = await asyncio.to_thread(
+                    engine.run_batch, cycles)
+                run_s = time.monotonic() - launched
+        except Exception as exc:
+            for p in batch:
+                if not p.future.done():
+                    p.future.set_result(SimResponse(
+                        p.req.rid, ERROR, error=repr(exc),
+                        fingerprint=session.fingerprint))
+            return
+        session.touch()
+        session.launches += 1
+        for i, p in enumerate(batch):
+            if not p.future.done():
+                p.future.set_result(SimResponse(
+                    p.req.rid, OK, result=results[i],
+                    fingerprint=session.fingerprint, engine_kind=kind,
+                    batch=len(batch), wait_s=launched - p.enqueued,
+                    run_s=run_s))
+
+    # ------------------------------------------------------------------
+    # TCP front-end (newline-delimited JSON, pipelined per connection)
+    # ------------------------------------------------------------------
+    async def serve_tcp(self, host: str = "127.0.0.1",
+                        port: int = 8421) -> asyncio.base_events.Server:
+        self._tcp_server = await asyncio.start_server(
+            self._client, host, port)
+        return self._tcp_server
+
+    async def _client(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        wlock = asyncio.Lock()
+        tasks: List[asyncio.Task] = []
+
+        async def one(line: bytes) -> None:
+            try:
+                req = decode_request(line)
+            except Exception as exc:
+                resp = SimResponse("?", ERROR,
+                                   error=f"bad request: {exc!r}")
+            else:
+                resp = await self.submit(req)
+            async with wlock:
+                writer.write(encode_response(resp))
+                await writer.drain()
+
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                if not line.strip():
+                    continue
+                tasks.append(asyncio.get_running_loop().create_task(
+                    one(line)))
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    # ------------------------------------------------------------------
+    async def close(self) -> None:
+        if self._tcp_server is not None:
+            self._tcp_server.close()
+            await self._tcp_server.wait_closed()
+            self._tcp_server = None
+        await self.batcher.close()

@@ -1,0 +1,153 @@
+"""Request/response protocol for the simulation service.
+
+One :class:`SimRequest` asks for one *stimulus* of one circuit: "simulate
+the canonical ``(circuit, scale)`` design with seed ``seed`` for ``cycles``
+Vcycles under this hardware config and these compiler knobs". The daemon
+answers with a :class:`SimResponse` wrapping the per-element
+:class:`~repro.sim.result.RunResult` the batched/sharded engines already
+demux, plus the serving metadata a client needs to reason about latency
+(which fingerprint queue it rode, how large the coalesced launch was, how
+long it waited for admission).
+
+The dataclasses are the in-process API; ``encode_*``/``decode_*`` give the
+TCP front-end a newline-delimited JSON wire form of the same objects
+(``{"v": 1, ...}\\n`` per message). Unknown JSON keys are ignored on
+decode, so clients and servers can skew by small protocol additions.
+"""
+from __future__ import annotations
+
+import json
+import uuid
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, Optional, Union
+
+from ..sim.result import RunResult
+
+PROTOCOL_VERSION = 1
+
+# response statuses
+OK = "ok"                # result carries the RunResult
+REJECTED = "rejected"    # admission refused (queue full) — retry later
+TIMEOUT = "timeout"      # deadline passed before the request was launched
+ERROR = "error"          # request invalid or the launch raised
+
+
+def _rid() -> str:
+    return uuid.uuid4().hex[:12]
+
+
+@dataclass(frozen=True)
+class SimRequest:
+    """One simulation stimulus.
+
+    ``circuit``/``scale`` name the design (``repro.circuits.build``);
+    ``seed`` selects the stimulus (per-seed init planes on the canonical
+    structural netlist — see :mod:`repro.serve.sessions`). ``cycles`` is
+    the Vcycle budget (None = the bench's self-checking budget plus
+    slack). ``hw`` overrides :class:`~repro.core.isa.HardwareConfig`
+    fields; ``options`` passes compiler knobs (``optimize``, ``use_luts``,
+    ``strategy``, ``sched_strategy``, ``placement``, ``pipeline``).
+    ``timeout`` is the admission deadline in seconds: if the request has
+    not been launched by then it is answered ``TIMEOUT`` instead of
+    holding the client forever.
+    """
+
+    circuit: str
+    scale: str = "full"
+    seed: int = 0
+    cycles: Optional[int] = None
+    hw: Optional[Dict[str, int]] = None
+    options: Dict[str, Any] = field(default_factory=dict)
+    timeout: Optional[float] = None
+    rid: str = field(default_factory=_rid)
+
+
+@dataclass
+class SimResponse:
+    """The daemon's answer to one :class:`SimRequest`.
+
+    ``batch`` is the size of the coalesced launch this request rode in
+    (the whole point of the service: many concurrent requests, one
+    launch); ``wait_s`` the time from admission to launch, ``run_s`` the
+    device occupancy of that launch (shared by all ``batch`` riders).
+    """
+
+    rid: str
+    status: str
+    result: Optional[RunResult] = None
+    error: Optional[str] = None
+    fingerprint: Optional[str] = None
+    engine_kind: Optional[str] = None
+    batch: int = 0
+    wait_s: float = 0.0
+    run_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.status == OK
+
+
+# ----------------------------------------------------------------------
+# wire form (newline-delimited JSON)
+# ----------------------------------------------------------------------
+
+def result_to_json(r: RunResult) -> Dict[str, Any]:
+    return {
+        "cycles": int(r.cycles),
+        # JSON object keys are strings; exception cores are ints
+        "exceptions": {str(k): int(v) for k, v in r.exceptions.items()},
+        "perf": {k: float(v) for k, v in r.perf.items()},
+        "registers": {k: int(v) for k, v in r.registers.items()},
+        "outputs": {k: int(v) for k, v in r.outputs.items()},
+        "batch_index": int(r.batch_index),
+    }
+
+
+def result_from_json(d: Dict[str, Any]) -> RunResult:
+    return RunResult(
+        cycles=int(d["cycles"]),
+        exceptions={int(k): int(v)
+                    for k, v in d.get("exceptions", {}).items()},
+        perf=dict(d.get("perf", {})),
+        registers={k: int(v) for k, v in d.get("registers", {}).items()},
+        outputs={k: int(v) for k, v in d.get("outputs", {}).items()},
+        batch_index=int(d.get("batch_index", 0)),
+    )
+
+
+def _fields(cls, d: Dict[str, Any]) -> Dict[str, Any]:
+    """Keep only the keys ``cls`` knows — forward-compatible decode."""
+    names = cls.__dataclass_fields__.keys()
+    return {k: v for k, v in d.items() if k in names}
+
+
+def encode_request(req: SimRequest) -> bytes:
+    doc = {"v": PROTOCOL_VERSION, **asdict(req)}
+    return (json.dumps(doc) + "\n").encode("utf-8")
+
+
+def decode_request(line: Union[str, bytes]) -> SimRequest:
+    d = json.loads(line)
+    v = d.pop("v", PROTOCOL_VERSION)
+    if v != PROTOCOL_VERSION:
+        raise ValueError(f"unsupported protocol version {v!r}")
+    return SimRequest(**_fields(SimRequest, d))
+
+
+def encode_response(resp: SimResponse) -> bytes:
+    doc = {"v": PROTOCOL_VERSION, **asdict(resp)}
+    if resp.result is not None:
+        doc["result"] = result_to_json(resp.result)
+    return (json.dumps(doc) + "\n").encode("utf-8")
+
+
+def decode_response(line: Union[str, bytes]) -> SimResponse:
+    d = json.loads(line)
+    v = d.pop("v", PROTOCOL_VERSION)
+    if v != PROTOCOL_VERSION:
+        raise ValueError(f"unsupported protocol version {v!r}")
+    result = d.pop("result", None)
+    resp = SimResponse(**_fields(SimResponse, d))
+    if result is not None:
+        resp.result = result_from_json(result)
+    return resp

@@ -1,0 +1,270 @@
+"""Session/cache manager: hot compiled ``Simulation``s, LRU-evicted.
+
+A *session* is one design the daemon can simulate without compiling:
+``(circuit fingerprint, hardware config, compiler knobs)`` → a compiled
+:class:`~repro.sim.facade.Simulation` plus the device-resident engines
+built over it. Sessions are what make the service economics work — the
+Manticore bargain is "compile once, simulate forever", and a long-lived
+daemon is where "forever" actually accumulates.
+
+**Canonical identity.** Some builders bake ``seeds[0]``-derived values
+into the *structure* (mm's ROM matrices, cgra's weights, rv32r's
+instruction immediates), so the fingerprint of ``build(name, seeds=[s])``
+is seed-dependent in general. The service therefore anchors every design
+to a canonical build — ``build(name, scale, seeds=[CANONICAL_SEED])`` —
+and defines a request's stimulus as *seed s of the canonical design*:
+per-batch init planes come from ``build(name, scale,
+seeds=[CANONICAL_SEED, s1, ..., sB])``, whose structure is exactly the
+canonical one (live-plane builds take structure from ``seeds[0]``), so
+every plane patches the one compiled Program. Requests that share the
+canonical fingerprint (plus hw + knobs) coalesce; for builders whose
+structure is seed-invariant (bc, mc, ...) the results are additionally
+bit-exact against an independent ``sim.compile(name, seeds=[s]).run()``.
+
+**Warm starts.** Compilation goes through :func:`repro.sim.compile` with
+the on-disk compile cache, so a restarted daemon (or an LRU-evicted
+session being re-admitted) pays an artifact load, not a recompile.
+Concurrent workers asking for the same uncompiled session serialize on a
+per-identity ``asyncio.Lock`` — one compile, everyone shares it; across
+*processes* the cache's atomic-rename last-writer-wins contract holds
+(see :class:`repro.sim.cache.CompileCache`).
+
+**Eviction.** Sessions are kept in an ``OrderedDict`` LRU bounded by
+``max_sessions`` and by ``memory_budget`` bytes (the sum of each
+session's program arrays plus its resident engines' state estimate) —
+the stand-in for device memory on interpret-mode CPU, and the real
+constraint on an accelerator.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..circuits import build
+from ..core.isa import HardwareConfig
+from ..sim import facade
+from ..sim.cache import CompileCache, resolve_cache
+from .protocol import SimRequest
+
+# the structural anchor: every session's netlist/planes are built with
+# this as seeds[0] (see module docstring)
+CANONICAL_SEED = 0
+
+# compiler knobs a request may set; anything else is a client error
+COMPILE_OPTIONS = frozenset(
+    ("optimize", "use_luts", "strategy", "sched_strategy", "placement",
+     "pipeline"))
+
+# per-session bound on memoized per-seed init planes (host memory)
+MAX_PLANE_CACHE = 4096
+
+
+@dataclass(frozen=True)
+class SessionKey:
+    """What the daemon coalesces on: same design, same hardware, same
+    compiler knobs → same compiled Program → one batched launch."""
+    fingerprint: str
+    hw_key: str
+    options_key: str
+
+
+def _hw_from(req: SimRequest) -> HardwareConfig:
+    return HardwareConfig(**req.hw) if req.hw else HardwareConfig()
+
+
+def _options_from(req: SimRequest) -> Dict[str, Any]:
+    opts = dict(req.options or {})
+    unknown = set(opts) - COMPILE_OPTIONS
+    if unknown:
+        raise ValueError(
+            f"unknown compile options {sorted(unknown)}; valid options are "
+            f"{sorted(COMPILE_OPTIONS)}")
+    return opts
+
+
+class Session:
+    """One hot design: compiled Simulation + plane cache + engine cache."""
+
+    def __init__(self, key: SessionKey, name: str, scale: str,
+                 hw: HardwareConfig, options: Dict[str, Any],
+                 sim: "facade.Simulation"):
+        self.key = key
+        self.name = name
+        self.scale = scale
+        self.hw = hw
+        self.options = dict(options)
+        self.sim = sim
+        self.last_used = time.monotonic()
+        self.launches = 0
+        # seed -> (reg_plane, mem_plane), LRU-bounded
+        self._planes: "OrderedDict[int, Tuple[Dict, Dict]]" = OrderedDict()
+        # (engine kind, B) -> hot engine, images rebound per batch
+        self._engines: Dict[Tuple[str, int], Any] = {}
+
+    # ------------------------------------------------------------------
+    def touch(self) -> None:
+        self.last_used = time.monotonic()
+
+    def default_cycles(self) -> int:
+        return self.sim.default_cycles()
+
+    @property
+    def fingerprint(self) -> str:
+        return self.key.fingerprint
+
+    # ------------------------------------------------------------------
+    def planes_for(self, seeds: List[int]) -> Tuple[List[Dict], List[Dict]]:
+        """Per-seed init planes for ``seeds``, memoized. Missing seeds are
+        produced by one netlist build anchored on the canonical seed
+        (structure identical to the compiled Program's), which is pure
+        host-side Python — no compilation."""
+        missing = [s for s in dict.fromkeys(seeds) if s not in self._planes]
+        if missing:
+            bench = build(self.name, self.scale,
+                          seeds=[CANONICAL_SEED] + missing)
+            for i, s in enumerate(missing):
+                self._planes[s] = (bench.reg_planes[i + 1],
+                                   bench.mem_planes[i + 1])
+        for s in seeds:
+            self._planes.move_to_end(s)
+        while len(self._planes) > MAX_PLANE_CACHE:
+            self._planes.popitem(last=False)
+        return ([self._planes[s][0] for s in seeds],
+                [self._planes[s][1] for s in seeds])
+
+    def images_for(self, seeds: List[int], workers: Optional[int] = None):
+        """Stacked ``[B, ...]`` init images for one coalesced batch."""
+        reg_planes, mem_planes = self.planes_for(seeds)
+        return self.sim.program.init_images_batch(reg_planes, mem_planes,
+                                                  workers=workers)
+
+    def engine_for(self, kind: str, images):
+        """A hot engine of ``kind`` for this batch shape: cached per
+        (kind, B) and rebound onto the new images (no retrace); first use
+        of a shape constructs (and traces) it once."""
+        B = int(images[0].shape[0])
+        eng = self._engines.get((kind, B))
+        if eng is None:
+            eng = self.sim.engine(kind, images=images)
+            self._engines[(kind, B)] = eng
+        else:
+            eng.rebind(images)
+        return eng
+
+    # ------------------------------------------------------------------
+    def nbytes(self) -> int:
+        """Resident-memory estimate: program arrays + per-engine batched
+        state (the device-budget currency the manager evicts on)."""
+        p = self.sim.program
+        base = sum(getattr(p, f).nbytes for f in
+                   ("code", "luts", "reg_init", "spad_init", "gmem_init"))
+        per_elem = (p.reg_init.nbytes + p.spad_init.nbytes
+                    + p.gmem_init.nbytes) * 4 // 2   # u16 images → u32 state
+        for (_, B) in self._engines:
+            base += B * per_elem
+        return base
+
+
+class SessionManager:
+    """LRU of compiled sessions behind one async front.
+
+    ``cache`` is the on-disk compile cache argument
+    (:func:`repro.sim.cache.resolve_cache` forms: True = default dir, a
+    path, a :class:`CompileCache`, or None/False to disable warm starts).
+    """
+
+    def __init__(self, *, cache=True, max_sessions: int = 8,
+                 memory_budget: Optional[int] = None):
+        self.cache: Optional[CompileCache] = resolve_cache(cache)
+        self.max_sessions = int(max_sessions)
+        self.memory_budget = memory_budget
+        self._sessions: "OrderedDict[SessionKey, Session]" = OrderedDict()
+        # (name, scale, hw_key, options_key) -> canonical fingerprint
+        self._fingerprints: Dict[Tuple, str] = {}
+        self._locks: Dict[Tuple, asyncio.Lock] = {}
+        self.stats: Dict[str, int] = {
+            "compiles": 0, "cache_hits": 0, "evictions": 0, "lookups": 0}
+
+    # ------------------------------------------------------------------
+    def _lock(self, ident: Tuple) -> asyncio.Lock:
+        lock = self._locks.get(ident)
+        if lock is None:
+            lock = self._locks[ident] = asyncio.Lock()
+        return lock
+
+    async def get(self, req: SimRequest) -> Session:
+        """The (possibly freshly compiled) session for ``req``. Raises
+        ``KeyError``/``ValueError`` for unknown circuits/scales/options —
+        the daemon maps those to ERROR responses."""
+        self.stats["lookups"] += 1
+        hw = _hw_from(req)
+        options = _options_from(req)
+        hw_key = json.dumps(req.hw or {}, sort_keys=True)
+        options_key = json.dumps(options, sort_keys=True)
+        ident = (req.circuit, req.scale, hw_key, options_key)
+
+        # fast path: fingerprint known and session resident
+        fp = self._fingerprints.get(ident)
+        if fp is not None:
+            sess = self._sessions.get(
+                SessionKey(fp, hw_key, options_key))
+            if sess is not None:
+                self._sessions.move_to_end(sess.key)
+                sess.touch()
+                return sess
+
+        async with self._lock(ident):
+            # re-check under the lock: a concurrent worker may have
+            # compiled this session while we waited
+            fp = self._fingerprints.get(ident)
+            if fp is not None:
+                sess = self._sessions.get(SessionKey(fp, hw_key,
+                                                     options_key))
+                if sess is not None:
+                    self._sessions.move_to_end(sess.key)
+                    sess.touch()
+                    return sess
+            sess = await asyncio.to_thread(
+                self._compile, req.circuit, req.scale, hw, hw_key,
+                options, options_key)
+            self._fingerprints[ident] = sess.key.fingerprint
+            self._sessions[sess.key] = sess
+            self.stats["compiles"] += 1
+            if sess.sim.cache_hit:
+                self.stats["cache_hits"] += 1
+            self._evict()
+            return sess
+
+    def _compile(self, name: str, scale: str, hw: HardwareConfig,
+                 hw_key: str, options: Dict[str, Any],
+                 options_key: str) -> Session:
+        """Blocking compile (runs on a worker thread): canonical bench →
+        facade compile through the on-disk cache."""
+        bench = build(name, scale, seeds=[CANONICAL_SEED])
+        sim = facade.compile(bench, hw, cache=self.cache, **options)
+        key = SessionKey(sim.fingerprint, hw_key, options_key)
+        return Session(key, name, scale, hw, options, sim)
+
+    def _evict(self) -> None:
+        def over() -> bool:
+            if len(self._sessions) > self.max_sessions:
+                return True
+            if self.memory_budget is not None:
+                total = sum(s.nbytes() for s in self._sessions.values())
+                return total > self.memory_budget
+            return False
+
+        while len(self._sessions) > 1 and over():
+            self._sessions.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    # ------------------------------------------------------------------
+    def resident(self) -> List[SessionKey]:
+        return list(self._sessions)
+
+    def nbytes(self) -> int:
+        return sum(s.nbytes() for s in self._sessions.values())

@@ -46,14 +46,18 @@ def default_cache_dir() -> Path:
     return Path(os.environ.get(ENV_VAR, "~/.cache/repro-sim")).expanduser()
 
 
-def cache_key(circuit: Circuit, hw: HardwareConfig, *,
+def cache_key(circuit: Optional[Circuit], hw: HardwareConfig, *,
               strategy: str = "balanced", use_luts: bool = True,
               optimize: bool = True, sched_strategy: str = "slack",
-              placement: str = "anneal", pipeline: str = "modulo") -> str:
-    """Deterministic key for one (circuit, hardware, options) request."""
+              placement: str = "anneal", pipeline: str = "modulo",
+              fingerprint: Optional[str] = None) -> str:
+    """Deterministic key for one (circuit, hardware, options) request.
+    ``fingerprint`` supplies a precomputed ``Circuit.fingerprint()`` (the
+    facade and the serving layer hash each circuit once); without it the
+    circuit is fingerprinted here."""
     payload = json.dumps({
         "format_version": FORMAT_VERSION,
-        "circuit": circuit.fingerprint(),
+        "circuit": fingerprint or circuit.fingerprint(),
         "hw": asdict(hw),
         "strategy": strategy,
         "use_luts": bool(use_luts),
@@ -66,7 +70,22 @@ def cache_key(circuit: Circuit, hw: HardwareConfig, *,
 
 
 class CompileCache:
-    """A directory of ``<key>.npz`` Program artifacts."""
+    """A directory of ``<key>.npz`` Program artifacts.
+
+    **Concurrency contract (last-writer-wins, no locks).** Entries are
+    published by :func:`repro.sim.artifact.save_program`, which writes to a
+    uniquely-named temp file in the cache directory and ``os.replace``-s it
+    over the entry — an atomic rename on POSIX and Windows. Two processes
+    (or daemon workers) cold-compiling the same key therefore race
+    harmlessly: each publishes a *complete* artifact, the later rename
+    wins, and a concurrent :meth:`load` observes either a full old entry, a
+    full new entry, or no entry — never a torn file. Determinism makes
+    last-writer-wins sound: both writers compiled the same key, so the
+    artifacts are interchangeable. A reader that does catch a half-state
+    (entry vanishing mid-read, incompatible version) reads it as a miss and
+    recompiles. ``tests/test_serve.py`` hammers this contract with
+    concurrent writer/reader threads.
+    """
 
     def __init__(self, root: Union[str, Path, None] = None):
         self.root = Path(root) if root is not None else default_cache_dir()

@@ -169,6 +169,15 @@ class BatchedEngine:
     def reset(self) -> None:
         self.state = self.m.init_state()
 
+    def rebind(self, images) -> None:
+        """Swap this engine onto a new batch of stimuli (same B) and
+        reset. The underlying machine keeps its traced/jitted Vcycle
+        dispatch (``BatchedMachine.rebind_images``), so a serving layer
+        can reuse one hot engine across successive coalesced batches."""
+        self.m.rebind_images(images)
+        self.batch = self.m.B
+        self.reset()
+
     def run(self, num_cycles: int) -> RunResult:
         self.state = self.m.run(self.state, num_cycles)
         return _snapshot(self, 0)

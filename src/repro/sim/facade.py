@@ -89,6 +89,44 @@ class Simulation:
     def cache_hit(self) -> bool:
         return bool(self.program.stats.get("cache_hit", False))
 
+    @property
+    def fingerprint(self) -> Optional[str]:
+        """Structural fingerprint of the compiled circuit
+        (:meth:`repro.core.netlist.Circuit.fingerprint`) — the identity the
+        compile cache and the serving batcher key on. Recorded in
+        ``Program.stats`` at compile time, so it survives artifact
+        round-trips; None only for hand-built Programs that never saw a
+        circuit."""
+        fp = self.meta.get("fingerprint") \
+            or self.program.stats.get("fingerprint")
+        if fp is None and self.circuit is not None:
+            fp = self.circuit.fingerprint()
+            self.meta["fingerprint"] = fp
+        return fp
+
+    def select_engine_kind(self, batch: Optional[int] = None, *,
+                           mesh=None, devices=None,
+                           shard_batch: Optional[bool] = None) -> str:
+        """The engine kind ``engine("auto")`` resolves to — without
+        constructing it. ``batch`` defaults to this Simulation's own
+        stimulus count; a serving layer passes the coalesced batch size it
+        is about to launch."""
+        if mesh is not None:
+            return "grid"
+        B = self.batch if batch is None else int(batch)
+        if shard_batch is None:
+            shard_batch = self.meta.get("shard_batch")
+        if B > 1 and _auto_shard(shard_batch, B, devices):
+            return "sharded"
+        if B > 1:
+            return "batched"
+        return "machine"
+
+    @property
+    def engine_kind(self) -> str:
+        """Auto-selected engine kind for this Simulation's own batch."""
+        return self.select_engine_kind()
+
     def default_cycles(self) -> int:
         if self.n_cycles is None:
             raise ValueError(
@@ -141,22 +179,22 @@ class Simulation:
         else:
             B = self.batch
 
+        if kind == "auto":
+            kind = self.select_engine_kind(B, mesh=mesh, devices=devices,
+                                           shard_batch=shard_batch)
         if kind in ("oracle", "netlist", "reference"):
             if self.circuit is None:
                 raise ValueError(
                     "oracle engine needs the source circuit — this "
                     "Simulation was loaded from an artifact")
             return OracleEngine(self.circuit, self.program)
-        if kind == "grid" or (kind == "auto" and mesh is not None):
+        if kind == "grid":
             if mesh is None:
                 raise ValueError("grid engine needs a mesh=")
             if images is None:
                 images = self.images()
             return GridEngine(self.program, mesh, images=images, **opts)
-        if shard_batch is None:
-            shard_batch = self.meta.get("shard_batch")
-        if kind == "sharded" or (kind == "auto" and B > 1
-                                 and _auto_shard(shard_batch, B, devices)):
+        if kind == "sharded":
             if images is None:
                 # host-parallel image generation straight into the
                 # stacked/sharded layout
@@ -165,7 +203,7 @@ class Simulation:
                 self.program, images=images,
                 batch=None if images is not None else B,
                 devices=devices, backend=backend, **opts)
-        if kind == "batched" or (kind == "auto" and B > 1):
+        if kind == "batched":
             if images is None:
                 images = self.images_stacked(workers=workers)
             return BatchedEngine(self.program, images=images,
@@ -287,13 +325,15 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
         circuit = bench.circuit
     hw = hw or HardwareConfig()
 
+    fp = circuit.fingerprint()
     cc = resolve_cache(cache)
     prog = None
     key = None
     if cc is not None:
         key = cache_key(circuit, hw, strategy=strategy, use_luts=use_luts,
                         optimize=optimize, sched_strategy=sched_strategy,
-                        placement=placement, pipeline=pipeline)
+                        placement=placement, pipeline=pipeline,
+                        fingerprint=fp)
         prog = cc.load(key)
     if prog is None:
         prog = compile_circuit(circuit, hw, strategy=strategy,
@@ -301,10 +341,15 @@ def compile(source, hw: Optional[HardwareConfig] = None, *,
                                sched_strategy=sched_strategy,
                                placement=placement, pipeline=pipeline)
         prog.stats["cache_hit"] = False
+        prog.stats["fingerprint"] = fp
         if cc is not None:
             cc.store(key, prog)
+    else:
+        # entries written before the fingerprint was recorded still get it
+        prog.stats["fingerprint"] = fp
     return Simulation(program=prog, bench=bench, circuit=circuit,
-                      meta={"cache_key": key, "shard_batch": shard_batch})
+                      meta={"cache_key": key, "shard_batch": shard_batch,
+                            "fingerprint": fp})
 
 
 def load(path: Union[str, Path]) -> Simulation:

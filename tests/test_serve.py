@@ -1,0 +1,376 @@
+"""Serving layer (``repro.serve``): dynamic batching over hot Simulations.
+
+Contracts under test:
+
+- coalescing is *semantics-free*: a batch of concurrent same-fingerprint
+  requests produces per-request results bit-exact against independent
+  ``sim.compile(name, seeds=[s]).run()`` runs (mc/bc — builders whose
+  structure is seed-invariant);
+- mixed-fingerprint traffic lands on separate queues and demuxes
+  correctly (mc and bc riders never contaminate each other);
+- admission policy: deadline-expired requests get TIMEOUT without
+  occupying a batch slot; a full queue refuses admission (REJECTED);
+  batches split at ``max_batch``;
+- the session LRU evicts under ``max_sessions`` and re-admission
+  recompiles *warm* through the on-disk compile cache;
+- ``Simulation.fingerprint`` / ``engine_kind`` / ``select_engine_kind``
+  are public and survive artifact round-trips;
+- the compile cache survives concurrent writers of one entry
+  (atomic-rename last-writer-wins: readers see a complete old or new
+  artifact, never a torn one);
+- ``BatchedEngine.rebind`` swaps stimuli onto a hot engine bit-exactly;
+- the TCP front-end round-trips the JSON protocol and still coalesces.
+"""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.sim as sim
+from repro.circuits import build
+from repro.core.compile import compile_circuit
+from repro.core.isa import HardwareConfig
+from repro.serve import (BatchPolicy, Batcher, Pending, Rejected,
+                         SessionManager, SimRequest, SimServer, TIMEOUT,
+                         decode_response, encode_request)
+from repro.sim.cache import CompileCache
+
+HWD = {"grid_width": 5, "grid_height": 5}
+HW = HardwareConfig(**HWD)
+
+
+@pytest.fixture(scope="module")
+def cache_dir(tmp_path_factory):
+    """One on-disk compile cache for the module: canonical designs
+    compile once, later tests warm-start."""
+    return str(tmp_path_factory.mktemp("serve_cache"))
+
+
+def _req(name, seed, **kw):
+    return SimRequest(name, scale="small", seed=seed, hw=HWD, **kw)
+
+
+def _assert_same_result(got, ref):
+    assert got.cycles == ref.cycles
+    assert got.exceptions == ref.exceptions
+    assert got.registers == ref.registers
+    assert got.outputs == ref.outputs
+
+
+# ----------------------------------------------------------------------
+# coalescing correctness
+# ----------------------------------------------------------------------
+
+def test_coalesced_bit_exact_vs_individual(cache_dir):
+    """Five concurrent mc requests ride one batched launch, and every
+    per-request result is bit-exact vs its own single-stimulus compile."""
+    seeds = [11, 12, 13, 14, 15]
+
+    async def go():
+        server = SimServer(sessions=SessionManager(cache=cache_dir),
+                           policy=BatchPolicy(max_batch=8, max_wait_s=0.3))
+        try:
+            return await asyncio.gather(
+                *(server.submit(_req("mc", s)) for s in seeds))
+        finally:
+            await server.close()
+
+    resps = asyncio.run(go())
+    assert all(r.ok for r in resps), [r.error for r in resps]
+    assert len({r.fingerprint for r in resps}) == 1
+    assert all(r.batch == len(seeds) for r in resps)     # one launch
+    assert all(r.engine_kind == "batched" for r in resps)
+    for s, r in zip(seeds, resps):
+        ref = sim.compile("mc", HW, scale="small", seeds=[s],
+                          cache=cache_dir).run()
+        assert r.result.finished and ref.finished
+        _assert_same_result(r.result, ref)
+
+
+def test_mixed_fingerprint_traffic_demuxes(cache_dir):
+    """Interleaved mc/bc traffic: two queues, two launches, every rider
+    gets its own circuit's (correct) result."""
+    async def go():
+        server = SimServer(sessions=SessionManager(cache=cache_dir),
+                           policy=BatchPolicy(max_batch=8, max_wait_s=0.3))
+        try:
+            reqs = []
+            for i in range(3):
+                reqs.append(_req("mc", 21 + i))
+                reqs.append(_req("bc", 31 + i))
+            return await asyncio.gather(
+                *(server.submit(r) for r in reqs))
+        finally:
+            await server.close()
+
+    resps = asyncio.run(go())
+    assert all(r.ok for r in resps), [r.error for r in resps]
+    mc_r, bc_r = resps[0::2], resps[1::2]
+    assert len({r.fingerprint for r in mc_r}) == 1
+    assert len({r.fingerprint for r in bc_r}) == 1
+    assert mc_r[0].fingerprint != bc_r[0].fingerprint
+    assert all(r.batch == 3 for r in resps)              # per-queue batches
+    for kind, group, seed0 in (("mc", mc_r, 21), ("bc", bc_r, 31)):
+        for i, r in enumerate(group):
+            ref = sim.compile(kind, HW, scale="small", seeds=[seed0 + i],
+                              cache=cache_dir).run()
+            assert r.result.finished and ref.finished
+            _assert_same_result(r.result, ref)
+
+
+def test_batched_engine_rebind_bit_exact(cache_dir):
+    """A hot engine rebound onto new stimulus images matches a freshly
+    built engine bit-exactly — the no-retrace residency contract."""
+    s = sim.compile("mc", HW, scale="small", seeds=[101, 102, 103],
+                    cache=cache_dir)
+    eng = s.engine("batched")
+    n = s.default_cycles()
+    eng.run_batch(n)
+
+    b2 = build("mc", "small", seeds=[201, 202, 203])
+    imgs2 = b2.images_batch(s.program)
+    fresh = s.engine("batched", images=imgs2).run_batch(n)
+    machine_before = eng.m
+    eng.rebind(imgs2)
+    assert eng.m is machine_before          # no rebuild, no retrace
+    rebound = eng.run_batch(n)
+    for got, ref in zip(rebound, fresh):
+        assert got.finished
+        _assert_same_result(got, ref)
+    with pytest.raises(ValueError):
+        eng.rebind(build("mc", "small", seeds=[1, 2]).images_batch(s.program))
+
+
+# ----------------------------------------------------------------------
+# admission policy
+# ----------------------------------------------------------------------
+
+def test_request_timeout(cache_dir):
+    """A request whose deadline passes before launch gets TIMEOUT and
+    never occupies a batch slot."""
+    async def go():
+        server = SimServer(sessions=SessionManager(cache=cache_dir),
+                           policy=BatchPolicy(max_batch=4, max_wait_s=0.2))
+        try:
+            ok = await server.submit(_req("mc", 1))
+            late = await server.submit(_req("mc", 2, timeout=0.0))
+            return ok, late, dict(server.batcher.stats)
+        finally:
+            await server.close()
+
+    ok, late, stats = asyncio.run(go())
+    assert ok.ok and ok.result.finished
+    assert late.status == TIMEOUT and late.result is None
+    assert late.wait_s >= 0.0
+    assert stats["timed_out"] == 1
+
+
+def test_batcher_backpressure_and_splitting():
+    """Pure-batcher unit test (no jax): queue-full admission refusal,
+    max_batch splitting, nothing lost."""
+    async def go():
+        launched = []
+        gate = asyncio.Event()
+
+        async def launch(key, batch):
+            await gate.wait()
+            launched.append([p.req.seed for p in batch])
+            for p in batch:
+                p.future.set_result(p.req.seed)
+
+        b = Batcher(BatchPolicy(max_batch=3, max_wait_s=0.05, max_queue=4),
+                    launch)
+        loop = asyncio.get_running_loop()
+
+        def pend(s):
+            return Pending(req=SimRequest("x", seed=s),
+                           future=loop.create_future())
+
+        first = [pend(i) for i in range(4)]
+        for p in first:
+            b.submit("k", p)
+        # let the drain task pull max_batch=3 into a forming batch (it
+        # then blocks on the gate); the queue holds the 4th
+        await asyncio.sleep(0.15)
+        extra = [pend(10 + i) for i in range(3)]
+        for p in extra:
+            b.submit("k", p)                       # queue back at 4
+        with pytest.raises(Rejected):
+            b.submit("k", pend(99))                # admission refused
+        gate.set()
+        res = await asyncio.gather(*(p.future for p in first + extra))
+        await b.close()
+        return launched, res, dict(b.stats)
+
+    launched, res, stats = asyncio.run(go())
+    assert sorted(res) == [0, 1, 2, 3, 10, 11, 12]
+    assert launched[0] == [0, 1, 2]                # split at max_batch
+    assert all(len(x) <= 3 for x in launched)
+    assert sum(len(x) for x in launched) == 7
+    assert stats["rejected"] == 1
+    assert stats["launches"] == len(launched)
+
+
+# ----------------------------------------------------------------------
+# session lifecycle
+# ----------------------------------------------------------------------
+
+def test_lru_eviction_recompiles_warm(tmp_path):
+    """max_sessions=1: admitting bc evicts mc; re-admitting mc compiles
+    *warm* from the on-disk cache and still simulates correctly."""
+    async def go():
+        sm = SessionManager(cache=str(tmp_path), max_sessions=1)
+        server = SimServer(sessions=sm,
+                           policy=BatchPolicy(max_batch=2, max_wait_s=0.05))
+        try:
+            r1 = await server.submit(_req("mc", 3))
+            assert sm.stats["cache_hits"] == 0     # cold: fresh cache dir
+            r2 = await server.submit(_req("bc", 3))
+            assert sm.stats["evictions"] >= 1
+            assert len(sm.resident()) == 1
+            r3 = await server.submit(_req("mc", 4))
+            return r1, r2, r3, dict(sm.stats)
+        finally:
+            await server.close()
+
+    r1, r2, r3, stats = asyncio.run(go())
+    for r in (r1, r2, r3):
+        assert r.ok and r.result.finished, r.error
+    assert r1.fingerprint == r3.fingerprint
+    assert stats["compiles"] == 3
+    assert stats["cache_hits"] == 1                # mc came back warm
+
+
+def test_unknown_circuit_and_option_are_errors(cache_dir):
+    async def go():
+        server = SimServer(sessions=SessionManager(cache=cache_dir),
+                           policy=BatchPolicy(max_wait_s=0.01))
+        try:
+            bad_name = await server.submit(SimRequest("nonesuch"))
+            bad_opt = await server.submit(
+                _req("mc", 1, options={"frobnicate": True}))
+            return bad_name, bad_opt
+        finally:
+            await server.close()
+
+    bad_name, bad_opt = asyncio.run(go())
+    assert bad_name.status == "error" and "nonesuch" in bad_name.error
+    assert bad_opt.status == "error" and "frobnicate" in bad_opt.error
+
+
+# ----------------------------------------------------------------------
+# public Simulation attributes (facade)
+# ----------------------------------------------------------------------
+
+def test_fingerprint_and_engine_kind_public(tmp_path):
+    s = sim.compile("mc", HW, scale="small")
+    assert s.fingerprint == s.circuit.fingerprint()
+    assert s.engine_kind == "machine"
+
+    s2 = sim.compile("mc", HW, scale="small", seeds=[1, 2])
+    assert s2.fingerprint is not None
+    assert s2.engine_kind == "batched"
+    fake8 = [object()] * 8
+    assert s2.select_engine_kind(64, devices=fake8) == "sharded"
+    assert s2.select_engine_kind(8, devices=fake8) == "batched"  # B < 2*D
+    assert s2.select_engine_kind(1) == "machine"
+    assert s2.select_engine_kind(64, devices=fake8,
+                                 shard_batch=False) == "batched"
+    s3 = sim.compile("mc", HW, scale="small", seeds=[1, 2],
+                     shard_batch=True)
+    assert s3.select_engine_kind(2, devices=fake8) == "sharded"
+
+    # the fingerprint is recorded in Program.stats, so it survives the
+    # artifact round-trip (a loaded Simulation has no circuit to hash)
+    p = tmp_path / "mc.npz"
+    s.save(p)
+    loaded = sim.load(p)
+    assert loaded.circuit is None
+    assert loaded.fingerprint == s.fingerprint
+
+
+# ----------------------------------------------------------------------
+# compile-cache concurrency (atomic rename, last-writer-wins)
+# ----------------------------------------------------------------------
+
+def test_cache_concurrent_writers_last_writer_wins(tmp_path):
+    """Writer threads hammer one cache key with two different (complete)
+    programs while readers load continuously: every successful load is a
+    bit-exact copy of one of the writers' programs — never a torn mix —
+    and the final entry is valid."""
+    prog_a = compile_circuit(build("mc", "small").circuit, HW)
+    prog_b = compile_circuit(build("bc", "small").circuit, HW)
+    cc = CompileCache(tmp_path)
+    key = "f" * 64
+    stop = threading.Event()
+    bad = []
+
+    def writer(prog):
+        while not stop.is_set():
+            cc.store(key, prog)
+
+    def reader():
+        while not stop.is_set():
+            p = cc.load(key)
+            if p is None:          # entry mid-replace reads as a miss
+                continue
+            ref = {"mc": prog_a, "bc": prog_b}.get(p.name)
+            if ref is None:
+                bad.append(f"unknown name {p.name!r}")
+            elif not (np.array_equal(p.code, ref.code)
+                      and np.array_equal(p.reg_init, ref.reg_init)
+                      and np.array_equal(p.xchg_src_core,
+                                         ref.xchg_src_core)):
+                bad.append("torn artifact read")
+
+    threads = [threading.Thread(target=writer, args=(prog_a,)),
+               threading.Thread(target=writer, args=(prog_b,)),
+               threading.Thread(target=reader),
+               threading.Thread(target=reader)]
+    for t in threads:
+        t.start()
+    time.sleep(1.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not bad, bad[:3]
+    final = cc.load(key)
+    assert final is not None and final.name in ("mc", "bc")
+    # no temp-file litter left behind in the cache directory
+    assert not [f for f in tmp_path.iterdir() if f.name.endswith(".tmp")]
+
+
+# ----------------------------------------------------------------------
+# TCP front-end
+# ----------------------------------------------------------------------
+
+def test_tcp_roundtrip_coalesces(cache_dir):
+    async def go():
+        server = SimServer(sessions=SessionManager(cache=cache_dir),
+                           policy=BatchPolicy(max_batch=4,
+                                              max_wait_s=0.25))
+        try:
+            tcp = await server.serve_tcp("127.0.0.1", 0)
+            port = tcp.sockets[0].getsockname()[1]
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", port)
+            reqs = [_req("mc", 41 + i) for i in range(2)]
+            for r in reqs:
+                writer.write(encode_request(r))
+            await writer.drain()
+            resps = [decode_response(await reader.readline())
+                     for _ in range(2)]
+            writer.close()
+            return reqs, resps
+        finally:
+            await server.close()
+
+    reqs, resps = asyncio.run(go())
+    by_rid = {r.rid: r for r in resps}
+    assert set(by_rid) == {r.rid for r in reqs}
+    for r in resps:
+        assert r.ok and r.result.finished
+        assert r.batch == 2                       # coalesced over TCP
+        assert r.result.cycles > 0 and r.result.registers
