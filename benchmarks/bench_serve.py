@@ -16,10 +16,17 @@ measured wave on fresh seeds (per-seed init-plane building and host →
 device image stacking stay inside the measured region — they are real
 per-request serving work).
 
+A third ``hardened`` arm runs the coalesced policy with the full
+fault-tolerance machinery attached (an all-zero ``FaultPlan``, circuit
+breakers, the retry/bisection path) but no fault ever firing — the
+recovery layer must cost <10% rps on the happy path.
+
 Emits ``results/bench/BENCH_serve.json`` and a root-level copy
 (``BENCH_serve.json``): one row per mode (rps, p50/p95 latency, observed
-batch sizes) plus a summary row with the rps speedup. Exits non-zero if
-coalescing does not beat B=1 or any sampled result is not bit-exact.
+batch sizes) plus a summary row with the rps speedup and the
+hardened/coalesced rps ratio. Exits non-zero if coalescing does not beat
+B=1, the hardened arm loses >10% rps, or any sampled result is not
+bit-exact.
 
   PYTHONPATH=src python -m benchmarks.bench_serve           # N=64/circuit
   PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # N=8, CI
@@ -37,8 +44,8 @@ import numpy as np
 import repro.sim as sim
 from benchmarks.common import emit, row_csv
 from repro.core import HardwareConfig
-from repro.serve import (BatchPolicy, SessionManager, SimRequest,
-                         SimServer)
+from repro.serve import (BatchPolicy, FaultPlan, RetryPolicy,
+                         SessionManager, SimRequest, SimServer)
 
 HWD = {"grid_width": 5, "grid_height": 5}
 HW = HardwareConfig(**HWD)
@@ -51,7 +58,7 @@ EXACT_SAMPLES = 3          # per circuit, vs individual compile+run
 
 
 def _policy(mode: str) -> BatchPolicy:
-    if mode == "coalesced":
+    if mode in ("coalesced", "hardened"):
         return BatchPolicy(max_batch=64, max_wait_s=MAX_WAIT_S,
                            max_queue=4096)
     return BatchPolicy(max_batch=1, max_wait_s=0.0, max_queue=4096)
@@ -82,9 +89,16 @@ async def _wave(server: SimServer, reqs: List[SimRequest]):
 
 async def _bench_mode(mode: str, names: List[str], scale: str, n: int,
                       cache_dir: str) -> dict:
+    # "hardened" = coalesced policy + the full fault-tolerance machinery
+    # attached (an all-zero FaultPlan, breaker bookkeeping, retry/bisect
+    # paths armed) with no fault ever firing — measures the overhead of
+    # the recovery layer on the happy path
+    faults = FaultPlan(seed=0) if mode == "hardened" else None
     server = SimServer(
-        sessions=SessionManager(cache=cache_dir, max_sessions=8),
-        policy=_policy(mode))
+        sessions=SessionManager(cache=cache_dir, max_sessions=8,
+                                faults=faults),
+        policy=_policy(mode), faults=faults,
+        retry=RetryPolicy() if mode == "hardened" else None)
     try:
         # warmup wave: compiles (warm via the shared cache after the first
         # mode) and the XLA trace for this mode's steady-state batch shape
@@ -145,12 +159,12 @@ async def _bench_mode(mode: str, names: List[str], scale: str, n: int,
 async def _run_async(names: List[str], scale: str, n: int,
                      cache_dir: str) -> List[dict]:
     rows = []
-    for mode in ("coalesced", "b1"):
+    for mode in ("coalesced", "b1", "hardened"):
         row = await _bench_mode(mode, names, scale, n, cache_dir)
         row_csv(f"serve/{mode}", 1e6 / row["rps"],
                 f"p95={row['p95_ms']:.0f}ms_meanB={row['mean_batch']:.1f}")
         rows.append(row)
-    coal, b1 = rows[0], rows[1]
+    coal, b1, hard = rows[0], rows[1], rows[2]
     rows.append({
         "mode": "summary",
         "scale": scale,
@@ -158,6 +172,9 @@ async def _run_async(names: List[str], scale: str, n: int,
         "speedup_rps": coal["rps"] / b1["rps"],
         "p50_ratio": coal["p50_ms"] / b1["p50_ms"],
         "p95_ratio": coal["p95_ms"] / b1["p95_ms"],
+        # the fault-tolerance layer with zero faults armed should be
+        # ~free: hardened rps within a few % of plain coalesced
+        "hardened_rps_ratio": hard["rps"] / coal["rps"],
     })
     return rows
 
@@ -177,10 +194,16 @@ def run(names=None, smoke: bool = False) -> None:
     print(f"# serve: coalesced {coal['rps']:.1f} rps "
           f"(mean batch {coal['mean_batch']:.1f}) vs b1 "
           f"{rows[1]['rps']:.1f} rps -> "
-          f"{summary['speedup_rps']:.2f}x aggregate rps")
+          f"{summary['speedup_rps']:.2f}x aggregate rps; "
+          f"hardened/coalesced rps ratio "
+          f"{summary['hardened_rps_ratio']:.3f}")
     if summary["speedup_rps"] <= 1.0:
         raise SystemExit("bench_serve: coalescing did not beat the B=1 "
                          f"baseline ({summary['speedup_rps']:.2f}x)")
+    if summary["hardened_rps_ratio"] < 0.90:
+        raise SystemExit(
+            "bench_serve: fault-tolerance machinery cost >10% rps with "
+            f"no faults armed (ratio {summary['hardened_rps_ratio']:.3f})")
     if not all(r.get("bit_exact_vs_individual", True) for r in rows):
         raise SystemExit("bench_serve: served results diverged from "
                          "individual compile+run references")

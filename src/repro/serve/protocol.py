@@ -11,8 +11,18 @@ long it waited for admission).
 
 The dataclasses are the in-process API; ``encode_*``/``decode_*`` give the
 TCP front-end a newline-delimited JSON wire form of the same objects
-(``{"v": 1, ...}\\n`` per message). Unknown JSON keys are ignored on
-decode, so clients and servers can skew by small protocol additions.
+(``{"v": 2, ...}\\n`` per message). Unknown JSON keys are ignored on
+decode and ``None``-valued fields are omitted on encode, so clients and
+servers can skew by small protocol additions: a v1 client never sees the
+v2 fields (``error_code``, ``retry_after_s``) unless they are set, and a
+v2 server still accepts v1 requests (``SUPPORTED_VERSIONS``).
+
+Failures are machine-readable: terminal non-OK responses carry an
+``error_code`` from ``ERROR_CODES`` alongside the human ``error`` string,
+so clients can branch (retry later on ``UNAVAILABLE``/``DRAINING``,
+resubmit elsewhere on ``QUEUE_FULL``, give up on ``POISONED``) without
+parsing ``repr(exc)`` prose. Absent ``error_code`` ⇒ a legacy (v1)
+server — clients must treat it as optional.
 """
 from __future__ import annotations
 
@@ -23,13 +33,32 @@ from typing import Any, Dict, Optional, Union
 
 from ..sim.result import RunResult
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 
 # response statuses
-OK = "ok"                # result carries the RunResult
-REJECTED = "rejected"    # admission refused (queue full) — retry later
-TIMEOUT = "timeout"      # deadline passed before the request was launched
-ERROR = "error"          # request invalid or the launch raised
+OK = "ok"                  # result carries the RunResult
+REJECTED = "rejected"      # admission refused (queue full) — retry later
+TIMEOUT = "timeout"        # deadline passed before the request was launched
+ERROR = "error"            # request invalid or the launch raised
+UNAVAILABLE = "unavailable"  # session circuit breaker open — retry after
+DRAINING = "draining"      # daemon shutting down — resubmit elsewhere
+
+# machine-readable error codes (SimResponse.error_code, protocol v2)
+ERR_BAD_REQUEST = "BAD_REQUEST"          # malformed request / unknown knobs
+ERR_COMPILE_FAILED = "COMPILE_FAILED"    # session compile raised
+ERR_IMAGE_BUILD_FAILED = "IMAGE_BUILD_FAILED"  # stimulus image build raised
+ERR_LAUNCH_FAILED = "LAUNCH_FAILED"      # engine launch raised (not isolated)
+ERR_POISONED = "POISONED"                # bisection isolated this stimulus
+ERR_UNAVAILABLE = "UNAVAILABLE"          # breaker open; see retry_after_s
+ERR_DRAINING = "DRAINING"                # admission stopped for shutdown
+ERR_TIMEOUT = "TIMEOUT"                  # deadline passed before launch
+ERR_QUEUE_FULL = "QUEUE_FULL"            # backpressure rejection
+
+ERROR_CODES = frozenset((
+    ERR_BAD_REQUEST, ERR_COMPILE_FAILED, ERR_IMAGE_BUILD_FAILED,
+    ERR_LAUNCH_FAILED, ERR_POISONED, ERR_UNAVAILABLE, ERR_DRAINING,
+    ERR_TIMEOUT, ERR_QUEUE_FULL))
 
 
 def _rid() -> str:
@@ -70,12 +99,19 @@ class SimResponse:
     (the whole point of the service: many concurrent requests, one
     launch); ``wait_s`` the time from admission to launch, ``run_s`` the
     device occupancy of that launch (shared by all ``batch`` riders).
+
+    ``error_code`` (v2) is the machine-readable failure class (one of
+    ``ERROR_CODES``; None on OK and on responses from legacy servers);
+    ``retry_after_s`` (v2) accompanies ``UNAVAILABLE``/``DRAINING`` —
+    the earliest time a retry of this identity can be admitted.
     """
 
     rid: str
     status: str
     result: Optional[RunResult] = None
     error: Optional[str] = None
+    error_code: Optional[str] = None
+    retry_after_s: Optional[float] = None
     fingerprint: Optional[str] = None
     engine_kind: Optional[str] = None
     batch: int = 0
@@ -85,6 +121,13 @@ class SimResponse:
     @property
     def ok(self) -> bool:
         return self.status == OK
+
+    @property
+    def terminal(self) -> bool:
+        """Every response the daemon emits is terminal — exactly one per
+        request; the property exists so drill/assert code reads clearly."""
+        return self.status in (OK, REJECTED, TIMEOUT, ERROR, UNAVAILABLE,
+                               DRAINING)
 
 
 # ----------------------------------------------------------------------
@@ -121,21 +164,31 @@ def _fields(cls, d: Dict[str, Any]) -> Dict[str, Any]:
     return {k: v for k, v in d.items() if k in names}
 
 
+def _strip_none(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Omit None-valued keys on the wire: decoders default them, and a
+    legacy (v1) peer never sees fields it does not know about."""
+    return {k: v for k, v in doc.items() if v is not None}
+
+
+def _check_version(d: Dict[str, Any]) -> None:
+    v = d.pop("v", PROTOCOL_VERSION)
+    if v not in SUPPORTED_VERSIONS:
+        raise ValueError(f"unsupported protocol version {v!r}")
+
+
 def encode_request(req: SimRequest) -> bytes:
-    doc = {"v": PROTOCOL_VERSION, **asdict(req)}
+    doc = {"v": PROTOCOL_VERSION, **_strip_none(asdict(req))}
     return (json.dumps(doc) + "\n").encode("utf-8")
 
 
 def decode_request(line: Union[str, bytes]) -> SimRequest:
     d = json.loads(line)
-    v = d.pop("v", PROTOCOL_VERSION)
-    if v != PROTOCOL_VERSION:
-        raise ValueError(f"unsupported protocol version {v!r}")
+    _check_version(d)
     return SimRequest(**_fields(SimRequest, d))
 
 
 def encode_response(resp: SimResponse) -> bytes:
-    doc = {"v": PROTOCOL_VERSION, **asdict(resp)}
+    doc = {"v": PROTOCOL_VERSION, **_strip_none(asdict(resp))}
     if resp.result is not None:
         doc["result"] = result_to_json(resp.result)
     return (json.dumps(doc) + "\n").encode("utf-8")
@@ -143,9 +196,7 @@ def encode_response(resp: SimResponse) -> bytes:
 
 def decode_response(line: Union[str, bytes]) -> SimResponse:
     d = json.loads(line)
-    v = d.pop("v", PROTOCOL_VERSION)
-    if v != PROTOCOL_VERSION:
-        raise ValueError(f"unsupported protocol version {v!r}")
+    _check_version(d)
     result = d.pop("result", None)
     resp = SimResponse(**_fields(SimResponse, d))
     if result is not None:

@@ -34,6 +34,17 @@ per-identity ``asyncio.Lock`` — one compile, everyone shares it; across
 session's program arrays plus its resident engines' state estimate) —
 the stand-in for device memory on interpret-mode CPU, and the real
 constraint on an accelerator.
+
+**Quarantine.** Each session *identity* — the ``(circuit, scale, hw,
+options)`` tuple, before it ever resolves to a fingerprint — carries a
+:class:`CircuitBreaker`. Consecutive compile or launch failures open it:
+further requests for that identity fast-fail with :class:`Unavailable`
+(the daemon answers ``UNAVAILABLE`` + ``retry_after_s``) instead of
+re-paying the failing compile or convoying the device behind a broken
+build. After a cooldown the breaker goes **half-open** and admits one
+probe; a successful compile/launch closes it, a failed probe re-opens it
+with doubled cooldown. Breaker state is part of the
+:meth:`SessionManager.stats` snapshot.
 """
 from __future__ import annotations
 
@@ -48,6 +59,7 @@ from ..circuits import build
 from ..core.isa import HardwareConfig
 from ..sim import facade
 from ..sim.cache import CompileCache, resolve_cache
+from . import faults as faultlib
 from .protocol import SimRequest
 
 # the structural anchor: every session's netlist/planes are built with
@@ -61,6 +73,100 @@ COMPILE_OPTIONS = frozenset(
 
 # per-session bound on memoized per-seed init planes (host memory)
 MAX_PLANE_CACHE = 4096
+
+
+class Unavailable(Exception):
+    """The identity's circuit breaker is open: fast-fail, retry later."""
+
+    def __init__(self, retry_after: float, state: str):
+        super().__init__(
+            f"session quarantined (breaker {state}); "
+            f"retry in {retry_after:.2f}s")
+        self.retry_after = float(retry_after)
+        self.state = state
+
+
+class CompileFailed(Exception):
+    """The session compile raised — distinct from a bad request (unknown
+    circuit/option), which never trips the breaker."""
+
+    def __init__(self, cause: BaseException):
+        super().__init__(f"compile failed: {cause!r}")
+        self.cause = cause
+
+
+class CircuitBreaker:
+    """Closed → (``threshold`` consecutive failures) → open →
+    (``cooldown_s``) → half-open, one probe → closed or re-open.
+
+    Single-event-loop use: ``allow()`` admits, ``record_success()`` /
+    ``record_failure()`` report outcomes. Re-opens double the cooldown up
+    to ``cooldown_max_s`` so a persistently broken identity backs off; a
+    half-open probe that never reports (e.g. its rider timed out in the
+    queue) is replaced after ``cooldown_s`` rather than wedging the
+    identity in half-open forever.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 1.0,
+                 cooldown_max_s: float = 60.0):
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.cooldown_max_s = float(cooldown_max_s)
+        self.state = self.CLOSED
+        self.failures = 0          # consecutive
+        self.opens = 0             # lifetime re-opens (scales cooldown)
+        self._open_until = 0.0
+        self._probe_started: Optional[float] = None
+
+    def _cooldown(self) -> float:
+        return min(self.cooldown_s * (2 ** max(self.opens - 1, 0)),
+                   self.cooldown_max_s)
+
+    def allow(self) -> Tuple[bool, float]:
+        """(admitted, retry_after_s). Admission from OPEN past the
+        cooldown transitions to HALF_OPEN and marks the caller as the
+        probe."""
+        now = time.monotonic()
+        if self.state == self.CLOSED:
+            return True, 0.0
+        if self.state == self.OPEN:
+            if now < self._open_until:
+                return False, self._open_until - now
+            self.state = self.HALF_OPEN
+            self._probe_started = now
+            return True, 0.0
+        # HALF_OPEN: one probe at a time, but a stale probe (rider lost
+        # to a queue timeout) must not wedge the identity
+        if (self._probe_started is not None
+                and now - self._probe_started >= self.cooldown_s):
+            self._probe_started = now
+            return True, 0.0
+        return False, max(self.cooldown_s / 4, 0.01)
+
+    def record_success(self) -> None:
+        self.state = self.CLOSED
+        self.failures = 0
+        self.opens = 0
+        self._probe_started = None
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == self.HALF_OPEN or self.failures >= self.threshold:
+            self.state = self.OPEN
+            self.opens += 1
+            self._open_until = time.monotonic() + self._cooldown()
+            self._probe_started = None
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "state": self.state,
+            "failures": self.failures,
+            "opens": self.opens,
+            "retry_after_s": max(self._open_until - time.monotonic(), 0.0)
+            if self.state == self.OPEN else 0.0,
+        }
 
 
 @dataclass(frozen=True)
@@ -100,6 +206,9 @@ class Session:
         self.sim = sim
         self.last_used = time.monotonic()
         self.launches = 0
+        # the identity's CircuitBreaker; assigned by the SessionManager
+        # (launch outcomes reported by the daemon feed it)
+        self.breaker: Optional[CircuitBreaker] = None
         # seed -> (reg_plane, mem_plane), LRU-bounded
         self._planes: "OrderedDict[int, Tuple[Dict, Dict]]" = OrderedDict()
         # (engine kind, B) -> hot engine, images rebound per batch
@@ -178,16 +287,28 @@ class SessionManager:
     """
 
     def __init__(self, *, cache=True, max_sessions: int = 8,
-                 memory_budget: Optional[int] = None):
+                 memory_budget: Optional[int] = None,
+                 faults: Optional["faultlib.FaultPlan"] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 compile_retries: int = 2,
+                 compile_backoff_s: float = 0.02):
         self.cache: Optional[CompileCache] = resolve_cache(cache)
         self.max_sessions = int(max_sessions)
         self.memory_budget = memory_budget
+        self.faults = faults
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.compile_retries = int(compile_retries)
+        self.compile_backoff_s = float(compile_backoff_s)
         self._sessions: "OrderedDict[SessionKey, Session]" = OrderedDict()
         # (name, scale, hw_key, options_key) -> canonical fingerprint
         self._fingerprints: Dict[Tuple, str] = {}
         self._locks: Dict[Tuple, asyncio.Lock] = {}
-        self.stats: Dict[str, int] = {
-            "compiles": 0, "cache_hits": 0, "evictions": 0, "lookups": 0}
+        self._breakers: Dict[Tuple, CircuitBreaker] = {}
+        self.counters: Dict[str, int] = {
+            "compiles": 0, "cache_hits": 0, "evictions": 0, "lookups": 0,
+            "compile_failures": 0, "unavailable": 0}
 
     # ------------------------------------------------------------------
     def _lock(self, ident: Tuple) -> asyncio.Lock:
@@ -196,16 +317,35 @@ class SessionManager:
             lock = self._locks[ident] = asyncio.Lock()
         return lock
 
+    def breaker_for(self, ident: Tuple) -> CircuitBreaker:
+        br = self._breakers.get(ident)
+        if br is None:
+            br = self._breakers[ident] = CircuitBreaker(
+                threshold=self.breaker_threshold,
+                cooldown_s=self.breaker_cooldown_s)
+        return br
+
     async def get(self, req: SimRequest) -> Session:
-        """The (possibly freshly compiled) session for ``req``. Raises
-        ``KeyError``/``ValueError`` for unknown circuits/scales/options —
-        the daemon maps those to ERROR responses."""
-        self.stats["lookups"] += 1
+        """The (possibly freshly compiled) session for ``req``.
+
+        Raises ``KeyError``/``ValueError`` for unknown circuits/scales/
+        options (bad requests — never counted by the breaker),
+        :class:`Unavailable` when the identity's breaker is open, and
+        :class:`CompileFailed` when the compile itself raised (counted;
+        transient injected faults are retried ``compile_retries`` times
+        first)."""
+        self.counters["lookups"] += 1
         hw = _hw_from(req)
         options = _options_from(req)
         hw_key = json.dumps(req.hw or {}, sort_keys=True)
         options_key = json.dumps(options, sort_keys=True)
         ident = (req.circuit, req.scale, hw_key, options_key)
+
+        breaker = self.breaker_for(ident)
+        allowed, retry_after = breaker.allow()
+        if not allowed:
+            self.counters["unavailable"] += 1
+            raise Unavailable(retry_after, breaker.state)
 
         # fast path: fingerprint known and session resident
         fp = self._fingerprints.get(ident)
@@ -228,22 +368,55 @@ class SessionManager:
                     self._sessions.move_to_end(sess.key)
                     sess.touch()
                     return sess
-            sess = await asyncio.to_thread(
-                self._compile, req.circuit, req.scale, hw, hw_key,
-                options, options_key)
+            sess = await self._compile_with_retry(
+                breaker, req.circuit, req.scale, hw, hw_key, options,
+                options_key)
+            sess.breaker = breaker
             self._fingerprints[ident] = sess.key.fingerprint
             self._sessions[sess.key] = sess
-            self.stats["compiles"] += 1
+            self.counters["compiles"] += 1
             if sess.sim.cache_hit:
-                self.stats["cache_hits"] += 1
+                self.counters["cache_hits"] += 1
+            breaker.record_success()
             self._evict()
             return sess
+
+    async def _compile_with_retry(self, breaker: CircuitBreaker,
+                                  name: str, scale: str,
+                                  hw: HardwareConfig, hw_key: str,
+                                  options: Dict[str, Any],
+                                  options_key: str) -> Session:
+        """Compile on a worker thread; transient faults retry with
+        backoff, terminal failures count against the breaker."""
+        delay = self.compile_backoff_s
+        attempt = 0
+        while True:
+            try:
+                return await asyncio.to_thread(
+                    self._compile, name, scale, hw, hw_key, options,
+                    options_key)
+            except (KeyError, ValueError, TypeError):
+                # bad request (unknown circuit/scale/knob value): the
+                # identity is not broken, the request is
+                raise
+            except Exception as exc:
+                if (getattr(exc, "transient", False)
+                        and attempt < self.compile_retries):
+                    attempt += 1
+                    await asyncio.sleep(delay)
+                    delay *= 2
+                    continue
+                self.counters["compile_failures"] += 1
+                breaker.record_failure()
+                raise CompileFailed(exc) from exc
 
     def _compile(self, name: str, scale: str, hw: HardwareConfig,
                  hw_key: str, options: Dict[str, Any],
                  options_key: str) -> Session:
         """Blocking compile (runs on a worker thread): canonical bench →
         facade compile through the on-disk cache."""
+        if self.faults is not None:
+            self.faults.check(faultlib.COMPILE, detail=f"{name}/{scale}")
         bench = build(name, scale, seeds=[CANONICAL_SEED])
         sim = facade.compile(bench, hw, cache=self.cache, **options)
         key = SessionKey(sim.fingerprint, hw_key, options_key)
@@ -260,7 +433,7 @@ class SessionManager:
 
         while len(self._sessions) > 1 and over():
             self._sessions.popitem(last=False)
-            self.stats["evictions"] += 1
+            self.counters["evictions"] += 1
 
     # ------------------------------------------------------------------
     def resident(self) -> List[SessionKey]:
@@ -268,3 +441,15 @@ class SessionManager:
 
     def nbytes(self) -> int:
         return sum(s.nbytes() for s in self._sessions.values())
+
+    def stats(self) -> Dict[str, Any]:
+        """Introspection snapshot: counters, residency, and per-identity
+        breaker state (the serving dashboard / drill assertion surface)."""
+        return {
+            "counters": dict(self.counters),
+            "resident": len(self._sessions),
+            "nbytes": self.nbytes(),
+            "breakers": {
+                f"{ident[0]}/{ident[1]}": br.snapshot()
+                for ident, br in self._breakers.items()},
+        }

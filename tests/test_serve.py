@@ -226,12 +226,12 @@ def test_lru_eviction_recompiles_warm(tmp_path):
                            policy=BatchPolicy(max_batch=2, max_wait_s=0.05))
         try:
             r1 = await server.submit(_req("mc", 3))
-            assert sm.stats["cache_hits"] == 0     # cold: fresh cache dir
+            assert sm.counters["cache_hits"] == 0  # cold: fresh cache dir
             r2 = await server.submit(_req("bc", 3))
-            assert sm.stats["evictions"] >= 1
+            assert sm.counters["evictions"] >= 1
             assert len(sm.resident()) == 1
             r3 = await server.submit(_req("mc", 4))
-            return r1, r2, r3, dict(sm.stats)
+            return r1, r2, r3, dict(sm.counters)
         finally:
             await server.close()
 
